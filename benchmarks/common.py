@@ -1,0 +1,89 @@
+"""Shared benchmark infrastructure.
+
+One synthetic WSJ1-calibrated corpus is built once per process and shared by
+every table; BENCH_SCALE (default 3000 docs, ~0.6M doc-level postings)
+trades fidelity for runtime.  Every benchmark emits ``name,us_per_call,
+derived`` rows (derived = the table's headline quantity, e.g. bytes/posting).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from functools import lru_cache
+
+import numpy as np
+
+BENCH_DOCS = int(os.environ.get("BENCH_SCALE", "3000"))
+
+
+@lru_cache(maxsize=None)
+def corpus(n_docs: int = BENCH_DOCS):
+    """Materialized synthetic docstream (list of term-lists).
+
+    The vocabulary universe scales with the collection (Heaps-law-like:
+    2 x n_docs) so the postings-per-term ratio matches the paper's corpora
+    (WSJ1: 98,732 docs / 159,734 terms / 20.7M postings ≈ 129 postings per
+    term); a fixed universe makes small benchmark corpora vocabulary-heavy
+    and inflates whole-index bytes/posting with head-block overhead."""
+    from repro.data.corpus import CorpusSpec, SyntheticCorpus
+    spec = CorpusSpec(n_docs=n_docs, words_per_doc=434.5,
+                      universe=max(4000, 2 * n_docs), seed=7)
+    return list(SyntheticCorpus(spec).doc_terms())
+
+
+@lru_cache(maxsize=None)
+def built_index(B: int = 64, growth: str = "const", word_level: bool = False,
+                n_docs: int = BENCH_DOCS):
+    from repro.core.index import DynamicIndex
+    docs = corpus(n_docs)
+    idx = DynamicIndex(B=B, growth=growth, word_level=word_level)
+    for doc in docs:
+        idx.add_document(doc)
+    return idx
+
+
+@lru_cache(maxsize=None)
+def doc_level_postings(n_docs: int = BENCH_DOCS):
+    """All (gap, f) pairs of the corpus doc-level index, flat arrays."""
+    idx = built_index(64, "const", False, n_docs)
+    gaps, fs = [], []
+    for term, h_ptr in idx.terms():
+        d, f = idx.store.decode_postings(h_ptr)
+        g = np.diff(d, prepend=0)
+        gaps.append(g)
+        fs.append(f)
+    return (np.concatenate(gaps).astype(np.uint64),
+            np.concatenate(fs).astype(np.uint64))
+
+
+def queries(idx, n=200, max_terms=4, seed=3):
+    """Query log over the collection's mid-frequency vocabulary."""
+    rng = np.random.default_rng(seed)
+    terms_by_ft = sorted(((idx.store.get_ft(h * idx.store.B), t)
+                          for t, h in idx.terms()), reverse=True)
+    pool = [t.decode() for _, t in terms_by_ft[10:1500]]
+    out = []
+    for _ in range(n):
+        k = int(rng.integers(1, max_terms + 1))
+        out.append(list(rng.choice(pool, size=k, replace=False)))
+    return out
+
+
+def timer(fn, *args, repeat=3, **kw):
+    """Best-of wall time in seconds."""
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class Emitter:
+    def __init__(self):
+        self.rows = []
+
+    def __call__(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.3f},{derived}", flush=True)

@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""§Perf hillclimb driver: lowers cell VARIANTS and records before/after.
+
+Three hillclimb targets (see EXPERIMENTS.md §Perf for the full log):
+
+  H1 paper-index/query_rank     (most representative of the paper)
+     variants: dense-accumulator scorer (paper-faithful TAAT analogue),
+               sparse sort-based scorer, collation ablation is host-side.
+  H2 recsys/gnn whole-mesh batch sharding (worst useful-compute ratio)
+     variants are code-level (before numbers retained in EXPERIMENTS.md).
+  H3 mistral-large train_4k     (most collective-bound LM cell)
+     variants: act_shard ∈ {seq, dmodel, none} — boundary-activation layout
+     trades remat memory vs per-layer collective traffic.
+
+Usage: PYTHONPATH=src python -m benchmarks.perf_iterations [--which h1 h3]
+Writes results/perf/<tag>.json with cost/memory/collective numbers.
+"""
+
+import argparse
+import json
+import time
+
+import jax
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "perf")
+
+
+def measure(tag: str, mesh, fn, in_shardings, args, donate=()):
+    from repro.launch.dryrun import collective_bytes
+    t0 = time.time()
+    with mesh:
+        comp = jax.jit(fn, in_shardings=in_shardings,
+                       donate_argnums=donate).lower(*args).compile()
+        ca = comp.cost_analysis() or {}
+        ma = comp.memory_analysis()
+        coll = collective_bytes(comp.as_text())
+    rec = {"tag": tag,
+           "hlo_flops": float(ca.get("flops", 0.0)),
+           "hlo_bytes": float(ca.get("bytes accessed", 0.0)),
+           "collectives": coll,
+           "temp_bytes": int(ma.temp_size_in_bytes),
+           "argument_bytes": int(ma.argument_size_in_bytes),
+           "compile_s": round(time.time() - t0, 1)}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[perf] {tag}: flops={rec['hlo_flops']:.3e} "
+          f"bytes={rec['hlo_bytes']:.3e} "
+          f"link={coll['link_bytes']:.3e} "
+          f"temp={rec['temp_bytes']/2**30:.2f}GiB", flush=True)
+    return rec
+
+
+def h1_index_scorer():
+    """Dense (paper-faithful) vs sparse sort-based scorer."""
+    from repro.configs.paper_index import ARCH
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh()
+    out = {}
+    for mode in ("ranked", "ranked_sparse"):
+        cell = ARCH.build(mesh, "query_rank", mode=mode)
+        out[mode] = measure(f"h1_index_{mode}", mesh, cell.fn,
+                            cell.in_shardings, cell.args)
+    m = out["ranked"]["hlo_bytes"] / max(out["ranked_sparse"]["hlo_bytes"], 1)
+    print(f"[perf] H1: sparse scorer reduces bytes accessed {m:.1f}x")
+    return out
+
+
+def h3_lm_act_shard():
+    """mistral train: boundary activation sharding variants (probe L=2,
+    which exposes per-layer collective volume exactly)."""
+    from dataclasses import replace
+
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh()
+    arch = get_arch("mistral-large-123b")
+    out = {}
+    for act in ("seq", "dmodel", "none"):
+        arch_v = type(arch)(arch_id=arch.arch_id,
+                            cfg=replace(arch.cfg, act_shard=act))
+        cell = arch_v.build(mesh, "train_4k", probe_layers=2)
+        out[act] = measure(f"h3_mistral_act_{act}", mesh, cell.fn,
+                           cell.in_shardings, cell.args)
+        # memory evidence needs the production (non-probe) lowering
+        cell_m = arch_v.build(mesh, "train_4k")
+        out[act + "_mem"] = measure(f"h3_mistral_act_{act}_mem", mesh,
+                                    cell_m.fn, cell_m.in_shardings,
+                                    cell_m.args, donate=(0, 1))
+    return out
+
+
+def h2_recsys_note():
+    print("[perf] H2 (whole-mesh batch sharding for recsys/gnn) is a code-"
+          "level change; BEFORE numbers are archived in EXPERIMENTS.md "
+          "§Perf from the pre-change dry-run; rerun dryrun.py for AFTER.")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", nargs="*", default=["h1", "h3"])
+    args = ap.parse_args()
+    if "h1" in args.which:
+        h1_index_scorer()
+    if "h2" in args.which:
+        h2_recsys_note()
+    if "h3" in args.which:
+        h3_lm_act_shard()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Train a reduced LM end-to-end with the production stack.
+
+    PYTHONPATH=src python examples/train_quickstart.py [--steps 30]
+
+Uses the same config/model/optimizer/trainer path as the full 512-chip
+launch (launch/train.py), shrunk to CPU scale: fault-tolerant Trainer
+(checkpoint every 10 steps, NaN fuse, straggler log) over the deterministic
+token pipeline.  Kill it mid-run and re-run: it resumes from the last
+checkpoint and replays the exact interrupted batch.
+"""
+
+import argparse
+import tempfile
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    ckpt = args.ckpt or tempfile.mkdtemp(prefix="repro-ckpt-")
+    print(f"checkpoints -> {ckpt}")
+    import sys
+    sys.argv = ["train", "--arch", args.arch, "--steps", str(args.steps),
+                "--batch", "4", "--seq", "64", "--ckpt-dir", ckpt]
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Fault-tolerant checkpointing (save/restore with atomic publish).
+
+Design points for thousand-node deployments, realized at library scale:
+
+  * **atomicity** — a checkpoint directory is staged under ``.tmp-<step>``
+    and published with a single ``os.rename`` (POSIX-atomic), so a crash
+    mid-save can never corrupt the restore point;
+  * **async save** — array host-transfer happens on the caller thread (cheap
+    device->host copy), serialization runs on a background thread so the
+    training step loop is not blocked (overlap of checkpoint I/O and
+    compute);
+  * **manifest** — pytree structure + dtypes/shapes in ``manifest.json``;
+    every leaf is one ``.npy`` (sharded arrays are gathered host-side here;
+    a multi-host deployment would write per-process shards keyed by
+    ``process_index``, same layout);
+  * **retention** — keep the newest ``keep`` checkpoints, never deleting the
+    newest complete one;
+  * **restore** — ``latest_step()`` + ``restore(step)`` rebuilds the exact
+    pytree; the trainer resumes from (step+1) and the deterministic data
+    pipeline replays the right batch (see repro.data.lm).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save -------------------------------------------------------------
+
+    def save(self, step: int, tree, blocking: bool = True) -> None:
+        leaves, treedef = jax.tree.flatten(tree)
+        host = [np.asarray(x) for x in leaves]
+        spec = {"treedef": str(treedef),
+                "leaves": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                           for a in host],
+                "step": step}
+
+        def work():
+            tmp = os.path.join(self.dir, f".tmp-{step}")
+            final = os.path.join(self.dir, f"step-{step:010d}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            for i, a in enumerate(host):
+                np.save(os.path.join(tmp, f"leaf-{i}.npy"), a)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(spec, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step-{s:010d}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step-"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("-")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like=None):
+        """Rebuild the pytree saved at ``step``.
+
+        ``like`` (an example pytree) supplies the treedef; leaves are loaded
+        in flatten order.  Without ``like`` a flat list is returned.
+        """
+        path = os.path.join(self.dir, f"step-{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            spec = json.load(f)
+        leaves = [np.load(os.path.join(path, f"leaf-{i}.npy"))
+                  for i in range(len(spec["leaves"]))]
+        if like is None:
+            return leaves
+        treedef = jax.tree.structure(like)
+        return jax.tree.unflatten(treedef, leaves)

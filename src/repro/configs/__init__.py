@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+from importlib import import_module
+
+ARCH_IDS = [
+    "llama4_scout_17b_a16e",
+    "granite_moe_3b_a800m",
+    "granite_3_2b",
+    "llama3_2_3b",
+    "mistral_large_123b",
+    "schnet",
+    "dlrm_mlperf",
+    "sasrec",
+    "din",
+    "two_tower_retrieval",
+    "paper_index",
+]
+
+ALIASES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "granite-3-2b": "granite_3_2b",
+    "llama3.2-3b": "llama3_2_3b",
+    "mistral-large-123b": "mistral_large_123b",
+    "dlrm-mlperf": "dlrm_mlperf",
+    "two-tower-retrieval": "two_tower_retrieval",
+}
+
+
+def get_arch(arch_id: str):
+    mod_name = ALIASES.get(arch_id, arch_id).replace("-", "_").replace(".", "_")
+    if mod_name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return import_module(f"repro.configs.{mod_name}").ARCH

@@ -1,0 +1,486 @@
+"""Family adapters: turn a model config + shape id into a lowerable cell.
+
+Every architecture exposes ``ARCH.build(mesh, shape_id)`` returning a
+``Cell``: the function to jit, its input ShapeDtypeStructs, in/out shardings,
+and the analytic MODEL_FLOPS for the roofline's "useful fraction" metric.
+The dry-run lowers ``jax.jit(cell.fn, in_shardings=...)`` against the
+structs — no arrays are ever allocated for the full-size configs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (batch_axes, lm_param_rules,
+                                        tree_shardings)
+from repro.models import gnn as gnn_mod
+from repro.models import lm as lm_mod
+from repro.models import recsys as rec_mod
+from repro.optim import adamw_init, adamw_update
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_id: str
+    kind: str                    # train_step | serve_step | prefill | query
+    fn: Callable
+    args: tuple                  # ShapeDtypeStructs (pytrees allowed)
+    in_shardings: Any
+    model_flops: float
+    notes: str = ""
+    donate_argnums: tuple = ()
+    # HLO cost_analysis counts while-loop bodies once; cells whose dominant
+    # compute sits inside a chunking scan carry the trip count here and the
+    # roofline reader scales flops/bytes/collectives by it.
+    cost_scale: float = 1.0
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+# ==========================================================================
+# LM family
+# ==========================================================================
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+@dataclass
+class LMArch:
+    arch_id: str
+    cfg: lm_mod.LMConfig
+    family: str = "lm"
+    shapes: tuple = tuple(LM_SHAPES)
+
+    def flops(self, shape_id: str) -> float:
+        s = LM_SHAPES[shape_id]
+        cfg = self.cfg
+        n_act = cfg.active_params_count
+        if s["kind"] == "train":
+            toks = s["seq"] * s["batch"]
+            return 6.0 * n_act * toks
+        if s["kind"] == "prefill":
+            toks = s["seq"] * s["batch"]
+            attn = (4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head
+                    * s["seq"] * toks / 2)  # causal half
+            return 2.0 * n_act * toks + attn
+        # decode: one token per sequence against a seq-long cache
+        toks = s["batch"]
+        attn = 4.0 * cfg.n_layers * cfg.n_heads * cfg.d_head * s["seq"] * toks
+        return 2.0 * n_act * toks + attn
+
+    def build(self, mesh, shape_id: str, probe_layers: int | None = None
+              ) -> Cell:
+        s = LM_SHAPES[shape_id]
+        cfg = self.cfg
+        if probe_layers is not None:
+            # §Roofline probe: unrolled loops, no grad-accum scan; FLOPs and
+            # bytes extrapolate linearly in probe_layers (see dryrun.py)
+            from dataclasses import replace
+            half = max(256, s["seq"] // 2)
+            cfg = replace(cfg, probe_layers=probe_layers, probe_unroll=True,
+                          microbatch=1, q_chunk=half, kv_chunk=half,
+                          loss_chunk=half, remat=False)
+        rules = lm_param_rules(mesh)
+        pshape = lm_mod.params_shape(cfg)
+        pshard = tree_shardings(pshape, mesh, rules)
+        dp = batch_axes(mesh)
+        rep = NamedSharding(mesh, P())
+
+        if s["kind"] == "train":
+            opt_shape = jax.eval_shape(
+                lambda p: adamw_init(p, state_dtype=cfg.opt_dtype), pshape)
+            opt_shard = tree_shardings(opt_shape, mesh, rules)
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((s["batch"], s["seq"]),
+                                               jnp.int32),
+                "labels": jax.ShapeDtypeStruct((s["batch"], s["seq"]),
+                                               jnp.int32)}
+            bshard = {k: NamedSharding(mesh, P(dp, None)) for k in batch}
+            step = lm_mod.make_train_step(
+                cfg, mesh, lambda p, g, st: adamw_update(p, g, st, 3e-4),
+                param_shardings=pshard)
+            return Cell(self.arch_id, shape_id, "train_step", step,
+                        (pshape, opt_shape, batch),
+                        (pshard, opt_shard, bshard), self.flops(shape_id),
+                        donate_argnums=(0, 1) if probe_layers is None
+                        else ())
+        if s["kind"] == "prefill":
+            tokens = jax.ShapeDtypeStruct((s["batch"], s["seq"]), jnp.int32)
+            tshard = NamedSharding(mesh, P(dp, None))
+            step = lm_mod.make_prefill_step(cfg, mesh)
+            return Cell(self.arch_id, shape_id, "serve_step", step,
+                        (pshape, tokens), (pshard, tshard),
+                        self.flops(shape_id))
+        # decode: serve_step(params, cache, token, pos)
+        cache = lm_mod.make_cache_shape(cfg, s["batch"], s["seq"])
+        if s["batch"] >= mesh.devices.size // mesh.shape["model"]:
+            cspec = P(None, dp, None, "model")   # batch-sharded cache
+            tokspec = P(dp)
+        else:
+            cspec = P(None, None, dp, "model")   # sequence-sharded cache
+            tokspec = P()
+        cshard = {k: NamedSharding(mesh, cspec) for k in cache}
+        token = jax.ShapeDtypeStruct((s["batch"],), jnp.int32)
+        serve = lm_mod.make_serve_step(cfg, mesh)
+        pos = s["seq"] - 1
+
+        def step(params, cache_, token_):
+            return serve(params, cache_, token_, pos)
+
+        return Cell(self.arch_id, shape_id, "serve_step", step,
+                    (pshape, cache, token),
+                    (pshard, cshard, NamedSharding(mesh, tokspec)),
+                    self.flops(shape_id),
+                    donate_argnums=(1,) if probe_layers is None else ())
+
+
+# ==========================================================================
+# GNN family (SchNet)
+# ==========================================================================
+
+def _pad512(n: int) -> int:
+    """Round node/edge counts up to 512 (mesh divisibility; masked anyway)."""
+    return (n + 511) // 512 * 512
+
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                          classify=47, kind="train"),
+    "minibatch_lg": dict(n_nodes=184320, n_edges=179200, d_feat=602,
+                         classify=41, kind="train"),
+    "ogb_products": dict(n_nodes=2449029, n_edges=61859140, d_feat=100,
+                         classify=47, kind="train"),
+    "molecule": dict(n_nodes=3840, n_edges=8192, d_feat=16, classify=0,
+                     n_graphs=128, kind="train"),
+}
+
+
+@dataclass
+class GNNArch:
+    arch_id: str
+    base_cfg: gnn_mod.SchNetConfig
+    family: str = "gnn"
+    shapes: tuple = tuple(GNN_SHAPES)
+
+    def cfg_for(self, shape_id: str) -> gnn_mod.SchNetConfig:
+        s = GNN_SHAPES[shape_id]
+        from dataclasses import replace
+        e_pad = _pad512(s["n_edges"])
+        # chunk the cfconv at >4M edges (ogb_products: 74 GB rbf otherwise)
+        chunk = e_pad // 16 if e_pad > (1 << 22) else None
+        return replace(self.base_cfg, d_feat=s["d_feat"],
+                       n_out=(s["classify"] or 1), edge_chunk=chunk)
+
+    def flops(self, shape_id: str) -> float:
+        s = GNN_SHAPES[shape_id]
+        c = self.base_cfg
+        e, n, dh, nr = s["n_edges"], s["n_nodes"], c.d_hidden, c.n_rbf
+        per_layer = 2.0 * e * (nr * dh + dh * dh) + 2.0 * n * 2 * dh * dh
+        proj = 2.0 * n * s["d_feat"] * dh
+        fb = 3.0  # fwd + bwd
+        return fb * (c.n_interactions * per_layer + proj)
+
+    def build(self, mesh, shape_id: str) -> Cell:
+        s = GNN_SHAPES[shape_id]
+        cfg = self.cfg_for(shape_id)
+        # §Perf H2 (same as recsys): edges/nodes shard over the whole mesh —
+        # SchNet has no tensor dim for the "model" axis (d_hidden=64).
+        dp = tuple(a for a in ("pod", "data", "model")
+                   if a in mesh.axis_names)
+        specs = gnn_mod.input_specs(cfg, _pad512(s["n_nodes"]),
+                                    _pad512(s["n_edges"]),
+                                    n_graphs=s.get("n_graphs", 1),
+                                    classify=bool(s["classify"]))
+        eshard = NamedSharding(mesh, P(dp))
+        nshard = NamedSharding(mesh, P(dp))
+        shardmap = {
+            "node_feat": NamedSharding(mesh, P(dp, None)),
+            "src": eshard, "dst": eshard, "dist": eshard,
+            "edge_mask": eshard, "node_mask": nshard,
+            "labels": nshard, "graph_ids": nshard,
+            "target": NamedSharding(mesh, P()),
+        }
+        bshard = {k: shardmap[k] for k in specs}
+        pshape = jax.eval_shape(
+            lambda: gnn_mod.init_params(cfg, jax.random.PRNGKey(0)))
+        pshard = jax.tree.map(lambda _: NamedSharding(mesh, P()), pshape)
+        opt_shape = jax.eval_shape(adamw_init, pshape)
+        opt_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                 opt_shape)
+        step = gnn_mod.make_train_step(
+            cfg, mesh, lambda p, g, st: adamw_update(p, g, st, 1e-3),
+            n_graphs=s.get("n_graphs", 1))
+        e_pad = _pad512(s["n_edges"])
+        n_chunks = (e_pad // cfg.edge_chunk) if cfg.edge_chunk else 1
+        return Cell(self.arch_id, shape_id, "train_step", step,
+                    (pshape, opt_shape, specs),
+                    (pshard, opt_shard, bshard), self.flops(shape_id),
+                    donate_argnums=(0, 1), cost_scale=float(n_chunks),
+                    notes="edge-chunked cfconv" if n_chunks > 1 else "")
+
+
+# ==========================================================================
+# RecSys family
+# ==========================================================================
+
+REC_SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieve"),
+}
+
+
+@dataclass
+class RecsysArch:
+    arch_id: str
+    cfg: Any
+    kind: str                    # dlrm | sasrec | din | twotower
+    family: str = "recsys"
+    shapes: tuple = tuple(REC_SHAPES)
+
+    # ---- batch spec builders per model ------------------------------------
+
+    def _batch_specs(self, B: int, serve: bool = False):
+        S = jax.ShapeDtypeStruct
+        f32, i32 = jnp.float32, jnp.int32
+        c = self.cfg
+        if self.kind == "dlrm":
+            sp = {"dense": S((B, c.n_dense), f32),
+                  "sparse": S((B, len(c.table_rows)), i32)}
+            if not serve:
+                sp["label"] = S((B,), f32)
+            return sp
+        if self.kind == "sasrec":
+            sp = {"seq": S((B, c.seq_len), i32)}
+            if serve:
+                sp["cands"] = S((B, 100), i32)
+            else:
+                sp.update(pos=S((B, c.seq_len), i32),
+                          neg=S((B, c.seq_len), i32),
+                          seq_mask=S((B, c.seq_len), f32))
+            return sp
+        if self.kind == "din":
+            sp = {"history": S((B, c.seq_len), i32),
+                  "hist_mask": S((B, c.seq_len), f32),
+                  "target": S((B,), i32)}
+            if not serve:
+                sp["label"] = S((B,), f32)
+            return sp
+        if self.kind == "twotower":
+            sp = {"user_feats": S((B, c.n_user_feats), i32),
+                  "user_mask": S((B, c.n_user_feats), f32),
+                  "item": S((B,), i32)}
+            if not serve:
+                sp.update(logq=S((B,), f32))
+            return sp
+        raise ValueError(self.kind)
+
+    def _loss_and_serve(self, mesh):
+        c = self.cfg
+        if self.kind == "dlrm":
+            return (lambda p, b: rec_mod.dlrm_loss(p, b, c, mesh),
+                    lambda p, b: rec_mod.dlrm_forward(p, b, c, mesh))
+        if self.kind == "sasrec":
+            return (lambda p, b: rec_mod.sasrec_loss(p, b, c, mesh),
+                    lambda p, b: rec_mod.sasrec_serve(p, b, c, mesh))
+        if self.kind == "din":
+            return (lambda p, b: rec_mod.din_loss(p, b, c, mesh),
+                    lambda p, b: rec_mod.din_forward(p, b, c, mesh))
+        if self.kind == "twotower":
+            return (lambda p, b: rec_mod.twotower_loss(p, b, c, mesh),
+                    lambda p, b: rec_mod.twotower_serve(p, b, c, mesh))
+        raise ValueError(self.kind)
+
+    def _init(self, key):
+        c = self.cfg
+        return {"dlrm": rec_mod.dlrm_init, "sasrec": rec_mod.sasrec_init,
+                "din": rec_mod.din_init,
+                "twotower": rec_mod.twotower_init}[self.kind](c, key)
+
+    def _pshard(self, pshape, mesh):
+        """Embedding tables row-shard over the whole mesh; MLPs replicate."""
+        all_axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.axis_names)
+
+        def pick(path, leaf):
+            name = "/".join(str(getattr(k, "key", k)) for k in path)
+            if ("table" in name or "embed" in name) and leaf.ndim == 2 \
+                    and leaf.shape[0] > 100_000:
+                return NamedSharding(mesh, P(all_axes, None))
+            return NamedSharding(mesh, P())
+
+        flat, tdef = jax.tree_util.tree_flatten_with_path(pshape)
+        return jax.tree_util.tree_unflatten(
+            tdef, [pick(p, l) for p, l in flat])
+
+    def flops(self, shape_id: str) -> float:
+        s = REC_SHAPES[shape_id]
+        c = self.cfg
+        B = s["batch"]
+        if self.kind == "dlrm":
+            bot = sum(2 * i * o for i, o in zip(
+                (c.n_dense, *c.bot_mlp[:-1]), c.bot_mlp))
+            n = len(c.table_rows) + 1
+            inter = 2 * n * n * c.embed_dim
+            top_in = c.embed_dim + n * (n - 1) // 2
+            top = sum(2 * i * o for i, o in zip(
+                (top_in, *c.top_mlp[:-1]), c.top_mlp))
+            per = bot + inter + top
+        elif self.kind == "sasrec":
+            D, S = c.embed_dim, c.seq_len
+            per = c.n_blocks * (2 * S * 3 * D * D + 4 * S * S * D
+                                + 2 * S * 2 * D * D)
+        elif self.kind == "din":
+            D, L = c.embed_dim, c.seq_len
+            attn = sum(2 * i * o for i, o in zip(
+                (4 * D, *c.attn_mlp), (*c.attn_mlp, 1)))
+            mlp = sum(2 * i * o for i, o in zip(
+                (2 * D, *c.mlp), (*c.mlp, 1)))
+            per = L * attn + mlp + 2 * L * D
+        else:  # twotower
+            D = c.embed_dim
+            tower = sum(2 * i * o for i, o in zip(
+                (D, *c.tower_mlp[:-1]), c.tower_mlp))
+            per = 2 * tower
+        mult = 3.0 if s["kind"] == "train" else 1.0
+        flops = mult * B * per
+        if self.kind == "twotower" and s["kind"] == "train":
+            # in-batch sampled softmax: the (B, B) logits matmul dominates
+            flops += mult * 2.0 * B * B * self.cfg.tower_mlp[-1]
+        if s["kind"] == "retrieve":
+            C = s["n_candidates"]
+            if self.kind == "twotower":
+                tower = sum(2 * i * o for i, o in zip(
+                    (self.cfg.embed_dim, *self.cfg.tower_mlp[:-1]),
+                    self.cfg.tower_mlp))
+                flops = C * tower + 2 * C * self.cfg.tower_mlp[-1]
+            else:
+                flops = per * C
+        return float(flops)
+
+    def build(self, mesh, shape_id: str) -> Cell:
+        s = REC_SHAPES[shape_id]
+        # Perf iteration (EXPERIMENTS.md §Perf H2): recsys models have no
+        # tensor dimension worth sharding on "model", so the batch shards
+        # over the WHOLE mesh — before this the model axis replicated all
+        # MLP compute 16x (useful-compute ratio 0.06 -> ~1).
+        dp = tuple(a for a in ("pod", "data", "model")
+                   if a in mesh.axis_names)
+        loss_fn, serve_fn = self._loss_and_serve(mesh)
+        pshape = jax.eval_shape(
+            lambda: self._init(jax.random.PRNGKey(0)))
+        pshard = self._pshard(pshape, mesh)
+        if s["kind"] == "train":
+            B = s["batch"]
+            specs = self._batch_specs(B)
+            bshard = {k: NamedSharding(mesh, P(dp, *(None,) * (v.ndim - 1)))
+                      for k, v in specs.items()}
+            opt_shape = jax.eval_shape(adamw_init, pshape)
+            opt_shard = adamw_like_shardings(pshape, pshard)
+            step = rec_mod.make_train_step(
+                loss_fn, lambda p, g, st: adamw_update(p, g, st, 1e-3))
+            return Cell(self.arch_id, shape_id, "train_step", step,
+                        (pshape, opt_shape, specs),
+                        (pshard, opt_shard, bshard), self.flops(shape_id),
+                        donate_argnums=(0, 1))
+        if s["kind"] == "serve":
+            B = s["batch"]
+            specs = self._batch_specs(B, serve=True)
+            bshard = {k: NamedSharding(mesh, P(dp, *(None,) * (v.ndim - 1)))
+                      for k, v in specs.items()}
+            return Cell(self.arch_id, shape_id, "serve_step", serve_fn,
+                        (pshape, specs), (pshard, bshard),
+                        self.flops(shape_id))
+        # retrieval_cand (candidate count padded for mesh divisibility)
+        C = _pad512(s["n_candidates"])
+        Sd = jax.ShapeDtypeStruct
+        if self.kind == "twotower":
+            from repro.models.recsys import twotower_retrieve
+            specs = {"user_feats": Sd((1, self.cfg.n_user_feats), jnp.int32),
+                     "user_mask": Sd((1, self.cfg.n_user_feats), jnp.float32),
+                     "cand_ids": Sd((C,), jnp.int32)}
+            bshard = {"user_feats": NamedSharding(mesh, P()),
+                      "user_mask": NamedSharding(mesh, P()),
+                      "cand_ids": NamedSharding(
+                          mesh, P(tuple(a for a in ("pod", "data", "model")
+                                        if a in mesh.axis_names)))}
+            fn = lambda p, b: twotower_retrieve(p, b, self.cfg, mesh)
+        else:
+            # score C candidate targets for one user context.  Chunked over
+            # candidates (python-unrolled: exact HLO costs): the row-sharded
+            # embedding gather otherwise replicates a (C, ...) intermediate
+            # on every device (observed 25 GiB on dlrm).
+            specs = self._retrieval_specs(C)
+            bshard = {k: NamedSharding(
+                mesh, P(dp, *(None,) * (v.ndim - 1)) if v.shape[0] == C
+                else P()) for k, v in specs.items()}
+            cost_scale = 1.0
+            if self.kind == "sasrec":
+                fn = serve_fn  # candidates ride dim 1; no big gather
+            else:
+                # lax.scan over candidate chunks: a while loop is the only
+                # construct the scheduler provably serializes (an unrolled
+                # python loop — even with optimization_barrier chains — left
+                # all 16 replicated chunk gathers live at once).
+                n_chunks = 16
+                cost_scale = float(n_chunks)
+
+                def fn(p, b, _serve=serve_fn, _C=C, _n=n_chunks):
+                    sz = _C // _n
+                    big = {k: v.reshape(_n, sz, *v.shape[1:])
+                           for k, v in b.items() if v.shape[0] == _C}
+                    small = {k: v for k, v in b.items() if v.shape[0] != _C}
+
+                    def body(_, sl):
+                        return None, _serve(p, {**sl, **small})
+
+                    _, outs = jax.lax.scan(body, None, big)
+                    return outs.reshape(-1)
+
+            return Cell(self.arch_id, shape_id, "serve_step", fn,
+                        (pshape, specs), (pshard, bshard),
+                        self.flops(shape_id), cost_scale=cost_scale,
+                        notes="chunked candidate scoring"
+                        if cost_scale > 1 else "")
+        return Cell(self.arch_id, shape_id, "serve_step", fn,
+                    (pshape, specs), (pshard, bshard), self.flops(shape_id))
+
+    def _retrieval_specs(self, C: int):
+        S = jax.ShapeDtypeStruct
+        f32, i32 = jnp.float32, jnp.int32
+        c = self.cfg
+        if self.kind == "dlrm":
+            return {"dense": S((C, c.n_dense), f32),
+                    "sparse": S((C, len(c.table_rows)), i32)}
+        if self.kind == "sasrec":
+            return {"seq": S((1, c.seq_len), i32), "cands": S((1, C), i32)}
+        if self.kind == "din":
+            return {"history": S((C, c.seq_len), i32),
+                    "hist_mask": S((C, c.seq_len), f32),
+                    "target": S((C,), i32)}
+        raise ValueError(self.kind)
+
+
+def adamw_like_shardings(pshape, pshard):
+    """AdamW state shardings: mu/nu mirror the param shardings."""
+    from repro.optim.adamw import AdamWState
+    rep = jax.tree.map(lambda s: s, pshard)
+    first = jax.tree.leaves(pshard)[0]
+    scalar = type(first)(first.mesh, P()) if hasattr(first, "mesh") else first
+    return AdamWState(step=scalar, mu=rep, nu=jax.tree.map(lambda s: s, rep))

@@ -1,0 +1,11 @@
+"""din [recsys]: embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80,
+target attention.  [arXiv:1706.06978; paper]"""
+
+from repro.configs.common import RecsysArch
+from repro.models.recsys import DINConfig
+
+ARCH = RecsysArch(
+    arch_id="din", kind="din",
+    # n_items padded 1e6 -> 512-multiple for whole-mesh row sharding
+    cfg=DINConfig(name="din", n_items=1_000_448, embed_dim=18, seq_len=100,
+                  attn_mlp=(80, 40), mlp=(200, 80)))

@@ -1,0 +1,14 @@
+"""dlrm-mlperf [recsys]: 13 dense + 26 sparse, embed_dim=128,
+bot 13-512-256-128, top 1024-1024-512-256-1, dot interaction (MLPerf Criteo
+1TB row counts, 40M cap).  [arXiv:1906.00091; paper]"""
+
+from repro.configs.common import RecsysArch
+from repro.data.recsys import CRITEO_TABLE_ROWS
+from repro.models.recsys import DLRMConfig
+
+ARCH = RecsysArch(
+    arch_id="dlrm-mlperf", kind="dlrm",
+    cfg=DLRMConfig(
+        name="dlrm-mlperf", table_rows=tuple(CRITEO_TABLE_ROWS),
+        embed_dim=128, n_dense=13, bot_mlp=(512, 256, 128),
+        top_mlp=(1024, 1024, 512, 256, 1)))

@@ -1,0 +1,11 @@
+"""schnet [gnn]: n_interactions=3 d_hidden=64 rbf=300 cutoff=10.
+[arXiv:1706.08566; paper]"""
+
+from repro.configs.common import GNNArch
+from repro.models.gnn import SchNetConfig
+
+ARCH = GNNArch(
+    arch_id="schnet",
+    base_cfg=SchNetConfig(
+        name="schnet", n_interactions=3, d_hidden=64, n_rbf=300,
+        cutoff=10.0))

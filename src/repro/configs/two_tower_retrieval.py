@@ -1,0 +1,16 @@
+"""two-tower-retrieval [recsys]: embed_dim=256 tower 1024-512-256, dot
+interaction, sampled-softmax retrieval.  [RecSys'19 (YouTube); unverified]
+
+This is the architecture the paper's technique plugs into directly: the
+immediate-access dynamic index is the lexical candidate generator feeding the
+dense dot-scoring stage (see examples/hybrid_retrieval.py)."""
+
+from repro.configs.common import RecsysArch
+from repro.models.recsys import TwoTowerConfig
+
+ARCH = RecsysArch(
+    arch_id="two-tower-retrieval", kind="twotower",
+    # vocabularies padded 2e6 -> 512-multiple for whole-mesh row sharding
+    cfg=TwoTowerConfig(name="two-tower-retrieval", n_users_vocab=2_000_384,
+                       n_items=2_000_384, embed_dim=256,
+                       tower_mlp=(1024, 512, 256), n_user_feats=8))

@@ -1,0 +1,303 @@
+"""Device-resident immediate-access index: the TPU query path.
+
+This is the hardware adaptation described in DESIGN.md §2.  The collated
+index image (§5.5 makes every chain contiguous, which is precisely what lets
+a TPU fetch a term's postings as one dense slice) is uploaded as flat arrays,
+and querying becomes a fixed-shape, fully data-parallel program:
+
+  1. *chain gather* — every query term's blocks are fetched in one gather of
+     shape (Q*T*MB, B) from the block array (MB = max blocks per term);
+  2. *parallel Double-VByte decode* — terminator flag bits -> per-byte code
+     index via cumulative ops -> payload shift/combine; the escape-pairing
+     automaton of Algorithm 2 runs as one short lax.scan across byte
+     positions, vectorized over every block in flight;
+  3. *docid reconstruction* — per-block prefix sums of d-gaps plus a
+     cumulative sum of leading b-gaps along each chain (§3.2's skip data);
+  4. *scoring* — TF×IDF scatter-add into a dense per-shard accumulator and
+     top-k, or conjunctive counting (a docid matches iff its hit count equals
+     the number of query terms).
+
+Everything below is pure jnp (the oracle); kernels/dvbyte_decode provides the
+Pallas VMEM-tiled implementation of step 2 and tests assert equivalence.
+
+The decoded-postings layout is (NBLK, B) "one potential value per byte
+position" with a validity mask — no dynamic shapes anywhere.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blockstore import H
+from .collate import is_collated
+from .index import DynamicIndex
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class DeviceIndex:
+    """Flat-array snapshot of a collated doc-level dynamic index."""
+
+    blocks: jnp.ndarray      # (NB, B) uint8 — the index array I
+    term_slot: jnp.ndarray   # (V,) i32 — first slot of each term's chain
+    term_nblk: jnp.ndarray   # (V,) i32 — chain length in blocks
+    term_skip: jnp.ndarray   # (V,) i32 — byte offset of postings in head
+    term_nx: jnp.ndarray     # (V,) i32 — tail write cursor (bytes)
+    term_ft: jnp.ndarray     # (V,) i32 — document frequency f_t
+    num_docs: int            # static
+    F: int                   # static fold threshold
+
+    def tree_flatten(self):
+        return ((self.blocks, self.term_slot, self.term_nblk, self.term_skip,
+                 self.term_nx, self.term_ft), (self.num_docs, self.F))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, num_docs=aux[0], F=aux[1])
+
+
+def build_device_image(index: DynamicIndex, vocab: list[bytes],
+                       pad_blocks: int | None = None) -> DeviceIndex:
+    """Snapshot a *collated, Const-mode, doc-level* index for the device."""
+    store = index.store
+    if not store.const_mode:
+        raise ValueError("device images require Const blocks (B-addressable)")
+    if index.word_level:
+        raise ValueError("device images are doc-level")
+    if not is_collated(index):
+        raise ValueError("collate() the index before snapshotting (§5.5)")
+    B = store.B
+    V = len(vocab)
+    slot = np.zeros(V, np.int32)
+    nblk = np.zeros(V, np.int32)
+    skip = np.zeros(V, np.int32)
+    nxs = np.zeros(V, np.int32)
+    fts = np.zeros(V, np.int32)
+    for i, t in enumerate(vocab):
+        h_ptr = index.lookup(t)
+        if h_ptr is None:
+            continue
+        hb = h_ptr * B
+        chain = list(store.chain_slots(h_ptr))
+        slot[i] = h_ptr
+        nblk[i] = len(chain)
+        skip[i] = store.head_fixed + int(store.I[hb + store.head_fixed - 1])
+        nxs[i] = store.get_nx(hb)
+        fts[i] = store.get_ft(hb)
+    nb = store.nblocks
+    if pad_blocks is not None:
+        nb = max(nb, pad_blocks)
+    blocks = np.zeros((nb, B), np.uint8)
+    blocks[: store.nblocks] = store.I[: store.nblocks * B].reshape(-1, B)
+    return DeviceIndex(
+        blocks=jnp.asarray(blocks), term_slot=jnp.asarray(slot),
+        term_nblk=jnp.asarray(nblk), term_skip=jnp.asarray(skip),
+        term_nx=jnp.asarray(nxs), term_ft=jnp.asarray(fts),
+        num_docs=index.num_docs, F=index.F)
+
+
+# --------------------------------------------------------------------------
+# step 2: parallel Double-VByte block decode (pure-jnp oracle for the kernel)
+# --------------------------------------------------------------------------
+
+
+def decode_blocks(blocks: jnp.ndarray, start: jnp.ndarray, end: jnp.ndarray,
+                  F: int):
+    """Decode a batch of B-byte blocks of Double-VByte postings.
+
+    Args:
+      blocks: (NB, B) uint8
+      start:  (NB,) i32 — first payload byte (head skip or H)
+      end:    (NB,) i32 — one past the last payload byte (nx or B)
+      F:      fold threshold
+    Returns (g, f, valid): each (NB, B); ``valid[i, j]`` marks byte position
+    j as the terminator of a *primary* code in block i, with g/f the decoded
+    pair (b-gap semantics for the first valid pair of each block preserved —
+    the caller handles chaining).
+    """
+    b = blocks.astype(jnp.int32)
+    NB, B = b.shape
+    pos = jnp.arange(B, dtype=jnp.int32)[None, :]
+    inside = (pos >= start[:, None]) & (pos < end[:, None])
+    term = ((b & 0x80) == 0) & inside           # terminator bytes
+    # start-of-code = previous terminator position + 1 (clamped to `start`)
+    prev_term = jnp.where(term, pos, -1)
+    prev_term = jax.lax.associative_scan(jnp.maximum, prev_term, axis=1)
+    code_start = jnp.concatenate(
+        [jnp.full((NB, 1), -1, jnp.int32), prev_term[:, :-1]], axis=1) + 1
+    code_start = jnp.maximum(code_start, start[:, None])
+    pos_in_code = pos - code_start
+    payload = (b & 0x7F) << (7 * jnp.clip(pos_in_code, 0, 4))
+    payload = jnp.where(inside, payload, 0)
+    csum = jnp.cumsum(payload, axis=1)
+    csum_at_start = jnp.take_along_axis(
+        jnp.pad(csum, ((0, 0), (1, 0))), code_start, axis=1)
+    value = jnp.where(term, csum - csum_at_start, 0)
+    is_value = term & (value > 0)               # null sentinel masks out
+    # Algorithm 2 unfold: pair escapes (value % F == 0) with the next value.
+    mod = value % F
+
+    def body(carry, x):
+        # carry: does the *previous value* (not byte) await its escape pair?
+        prev_esc = carry
+        isv, v, m = x
+        consumed = isv & prev_esc
+        primary = isv & ~consumed
+        esc_now = primary & (m == 0)
+        g = jnp.where(m > 0, 1 + v // F, v // F)
+        f = jnp.where(m > 0, m, 0)
+        # a consumed value completes its predecessor's escape: emit nothing
+        # here, but patch f onto the predecessor via the second output
+        fpatch = jnp.where(consumed, F + v - 1, 0)
+        # the carry only changes at value positions (byte gaps preserve it)
+        new_carry = jnp.where(isv, esc_now, prev_esc)
+        return new_carry, (primary, g, f, fpatch)
+
+    xs = (jnp.swapaxes(is_value, 0, 1), jnp.swapaxes(value, 0, 1),
+          jnp.swapaxes(mod, 0, 1))
+    init = jnp.zeros(NB, bool)
+    # unroll: keeps HLO cost_analysis exact (while bodies count once) and
+    # the body is a handful of elementwise vector ops over (NB,)
+    _, (primary, g, f, fpatch) = jax.lax.scan(body, init, xs, unroll=True)
+    primary = jnp.swapaxes(primary, 0, 1)
+    g = jnp.swapaxes(g, 0, 1)
+    f = jnp.swapaxes(f, 0, 1)
+    fpatch = jnp.swapaxes(fpatch, 0, 1)
+    # shift fpatch one value-slot left: the consumed value sits at the NEXT
+    # terminator position after its primary; scatter back via the same
+    # associative trick — for each primary with f == 0, take the fpatch of
+    # the next value position.  Positions are sparse; use a reverse scan that
+    # propagates the nearest fpatch to the left.
+    nxt = jax.lax.associative_scan(
+        lambda a, b: jnp.where(b != 0, b, a),
+        jnp.where(fpatch > 0, fpatch, 0), axis=1, reverse=True)
+    f = jnp.where(primary & (f == 0), nxt, f)
+    valid = primary
+    return g, f, valid
+
+
+# --------------------------------------------------------------------------
+# steps 1+3+4: full batched query
+# --------------------------------------------------------------------------
+
+
+MAX_BLOCKS = 64  # per-term chain-length cap for the gather (pad/truncate)
+
+
+@partial(jax.jit, static_argnames=("k", "mode", "max_blocks", "decode_fn"))
+def query_step(image: DeviceIndex, qterms: jnp.ndarray, qmask: jnp.ndarray,
+               k: int = 10, mode: str = "ranked",
+               max_blocks: int = MAX_BLOCKS, decode_fn=None,
+               doclens: jnp.ndarray | None = None):
+    """Batched query execution against a device image.
+
+    Args:
+      qterms: (Q, T) i32 term ids (padded);  qmask: (Q, T) bool.
+      mode: "ranked" (top-k TF×IDF, dense accumulator), "ranked_sparse"
+        (top-k TF×IDF, sort-based), "bm25" (top-k BM25, sort-based —
+        requires ``doclens`` (N+1,) f32; paper §6.2's future work), or
+        "conjunctive" (hit bitmap counts).
+    Returns (top docids (Q, k) i32, top scores (Q, k) f32) for ranked
+    modes, or (matches (Q, N) bool, counts) for conjunctive mode.
+    """
+    B = image.blocks.shape[1]
+    Q, T = qterms.shape
+    flat_terms = qterms.reshape(-1)
+    slot = image.term_slot[flat_terms]
+    nblk = image.term_nblk[flat_terms]
+    skip = image.term_skip[flat_terms]
+    nx = image.term_nx[flat_terms]
+    # ---- step 1: contiguous chain gather (collation makes this a slice) ----
+    bidx = slot[:, None] + jnp.arange(max_blocks, dtype=jnp.int32)[None, :]
+    bvalid = (jnp.arange(max_blocks)[None, :] < nblk[:, None]) \
+        & qmask.reshape(-1)[:, None]
+    bidx = jnp.where(bvalid, bidx, 0)
+    gathered = image.blocks[bidx.reshape(-1)]          # (QT*MB, B)
+    # per-block payload bounds
+    is_head = jnp.broadcast_to(jnp.arange(max_blocks)[None, :] == 0,
+                               (Q * T, max_blocks))
+    is_tail = (jnp.arange(max_blocks)[None, :] == (nblk - 1)[:, None])
+    start = jnp.where(is_head, skip[:, None], H).reshape(-1)
+    end = jnp.where(is_tail, nx[:, None], B).reshape(-1)
+    end = jnp.where(bvalid.reshape(-1), end, 0)        # invalid block: empty
+    # ---- step 2: parallel decode ----
+    fn = decode_fn if decode_fn is not None else decode_blocks
+    g, f, valid = fn(gathered, start, end, image.F)    # (QT*MB, B)
+    g = g.reshape(Q * T, max_blocks, B)
+    f = f.reshape(Q * T, max_blocks, B)
+    valid = valid.reshape(Q * T, max_blocks, B)
+    # ---- step 3: docid reconstruction ----
+    gv = jnp.where(valid, g, 0)
+    within = jnp.cumsum(gv, axis=2)                    # in-block gap sums
+    # leading value of each block is a b-gap (or the absolute first docid for
+    # the head, since last_d starts at 0): chain first-docids = cumsum of the
+    # per-block first gaps
+    first_gap = jnp.max(jnp.where(
+        jnp.cumsum(valid, axis=2) == 1, gv, 0), axis=2)  # (QT, MB)
+    block_first = jnp.cumsum(first_gap, axis=1)        # absolute first docids
+    docid = block_first[:, :, None] + (within - first_gap[:, :, None])
+    docid = jnp.where(valid, docid, 0)                 # (QT, MB, B)
+    # ---- step 4: scoring ----
+    N = image.num_docs
+    flat_docs = docid.reshape(Q, -1)
+    if mode == "conjunctive":
+        hits = jnp.zeros((Q, N + 1), jnp.int32)
+        ones = valid.reshape(Q, -1).astype(jnp.int32)
+        hits = jax.vmap(lambda h, dd, oo: h.at[dd].add(oo))(hits, flat_docs,
+                                                            ones)
+        nterms = qmask.sum(axis=1)
+        matches = (hits[:, 1:] == nterms[:, None]) & (nterms[:, None] > 0)
+        return matches, matches.sum(axis=1)
+    ft = jnp.maximum(image.term_ft[flat_terms], 1).astype(jnp.float32)
+    if mode == "bm25":
+        # Okapi BM25 (k1=0.9, b=0.4): saturated tf with length normalization
+        k1, b = 0.9, 0.4
+        idf = jnp.log1p((N - ft + 0.5) / (ft + 0.5))
+        idf = (idf * qmask.reshape(-1)).reshape(Q, T)
+        dl = doclens[docid.reshape(Q, -1)]                  # (Q, P)
+        avgdl = jnp.maximum(doclens[1:].sum() / N, 1e-9)
+        fv = jnp.where(valid, f, 0).astype(jnp.float32).reshape(Q, -1)
+        tf = (fv * (k1 + 1.0)) / (fv + k1 * (1.0 - b + b * dl / avgdl))
+        w = (tf.reshape(Q, T, max_blocks, B)
+             * idf[:, :, None, None]).reshape(Q, -1)
+    else:
+        idf = jnp.log1p(N / ft)
+        idf = (idf * qmask.reshape(-1)).reshape(Q, T)
+        w = jnp.log1p(jnp.where(valid, f, 0).astype(jnp.float32))
+        w = w.reshape(Q, T, max_blocks, B) * idf[:, :, None, None]
+        w = w.reshape(Q, -1)
+    if mode in ("ranked_sparse", "bm25"):
+        # §Perf H1: sort-based sparse aggregation.  The dense accumulator
+        # touches (Q, N) floats (N = shard docs, >> touched postings); here
+        # cost is O(Q * P log P) on P = T*max_blocks*B posting slots only.
+        order = jnp.argsort(flat_docs, axis=1)
+        d_s = jnp.take_along_axis(flat_docs, order, axis=1)   # (Q, P)
+        w_s = jnp.take_along_axis(w, order, axis=1)
+        csum = jnp.cumsum(w_s, axis=1)
+        P = d_s.shape[1]
+        nxt = jnp.concatenate(
+            [d_s[:, 1:], jnp.full((Q, 1), -1, d_s.dtype)], axis=1)
+        is_end = d_s != nxt                                   # run ends
+        # csum at the previous run end, gather-free (same trick as decode)
+        pos = jnp.arange(P)[None, :]
+        prev_end = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(is_end, pos, -1), axis=1)
+        prev_end = jnp.concatenate(
+            [jnp.full((Q, 1), -1), prev_end[:, :-1]], axis=1)
+        prev_csum = jnp.where(
+            prev_end >= 0,
+            jnp.take_along_axis(csum, jnp.maximum(prev_end, 0), axis=1), 0.0)
+        run_score = jnp.where(is_end & (d_s > 0), csum - prev_csum, -jnp.inf)
+        top_s, pos_k = jax.lax.top_k(run_score, k)
+        top_d = jnp.take_along_axis(d_s, pos_k, axis=1)
+        return top_d.astype(jnp.int32), top_s
+    scores = jnp.zeros((Q, N + 1), jnp.float32)
+    scores = jax.vmap(lambda s, dd, ww: s.at[dd].add(ww))(scores, flat_docs, w)
+    scores = scores.at[:, 0].set(-jnp.inf)
+    top_s, top_d = jax.lax.top_k(scores, k)
+    return top_d.astype(jnp.int32), top_s

@@ -1,0 +1,194 @@
+"""DynamicIndex: the immediate-access index of paper §3 (ingest side).
+
+Combines the BlockStore (Figure 3 / Algorithm 1) with the vocabulary hash
+array of §3.2: "a hash array of 32-bit integers that stores block offsets ...
+twice the size of the collection vocabulary (using an extensible hashing
+technique) ... a simple linear advance collision resolution technique",
+giving O(|t|+1) expected lookup.  The hash array stores h_ptr+1 (0 = empty
+slot) and is costed at ``4 * len(hash)`` bytes, which equals the paper's
+``8v`` when the load factor is 1/2.
+
+Documents are ordinal, 1-based (d-gaps must be >= 1).  ``add_document``
+implements §3.3: parse, sort-count term occurrences, then one ``add_posting``
+per unique term (doc-level) or per occurrence (word-level §5.1).
+
+Ingest and query may interleave freely: the structure is always consistent
+after each ``add_document`` returns (the paper's immediate-access property).
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import numpy as np
+
+from .blockstore import BlockStore, H
+from .extensible import GrowthPolicy, make_policy
+
+_FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+_FNV_PRIME = np.uint64(0x100000001B3)
+
+
+def fnv1a(term: bytes) -> int:
+    """FNV-1a 64-bit hash, folded to 32 bits (cheap, good avalanche)."""
+    h = _FNV_OFFSET
+    for b in term:
+        h = np.uint64((int(h) ^ b) * int(_FNV_PRIME) & 0xFFFFFFFFFFFFFFFF)
+    return (int(h) ^ (int(h) >> 32)) & 0xFFFFFFFF
+
+
+class DynamicIndex:
+    """An immediate-access dynamic inverted index (document- or word-level)."""
+
+    def __init__(self, B: int = 64, growth: str | GrowthPolicy = "const",
+                 F: int | None = None, word_level: bool = False,
+                 expon_k: float = 1.1, initial_hash_bits: int = 10):
+        policy = (growth if isinstance(growth, GrowthPolicy)
+                  else make_policy(growth, B, expon_k))
+        if F is None:
+            F = 3 if word_level else 4  # paper defaults (§3.5, §5.1)
+        self.store = BlockStore(B=B, policy=policy, F=F, word_level=word_level)
+        self.word_level = word_level
+        self.F = F
+        self.hash = np.zeros(1 << initial_hash_bits, dtype=np.uint32)
+        self.vocab_size = 0
+        self.num_docs = 0
+        self.num_postings = 0
+        self.num_words = 0
+        # host-side acceleration cache (pure cache of hash-array content; the
+        # probe path below is the structure of record and tested against it)
+        self._cache: dict[bytes, int] = {}
+
+    # ------------------------------------------------------------------
+    # vocabulary hash (§3.2)
+    # ------------------------------------------------------------------
+
+    def _probe(self, term: bytes):
+        """Return (h_ptr or None, slot_index) via linear probing."""
+        mask = len(self.hash) - 1
+        i = fnv1a(term) & mask
+        while True:
+            v = int(self.hash[i])
+            if v == 0:
+                return None, i
+            h_ptr = v - 1
+            if self.store.term_bytes(h_ptr * self.store.B) == term:
+                return h_ptr, i
+            i = (i + 1) & mask
+
+    def _grow_hash(self) -> None:
+        old = self.hash
+        self.hash = np.zeros(len(old) * 2, dtype=np.uint32)
+        mask = len(self.hash) - 1
+        for v in old[old != 0]:
+            h_ptr = int(v) - 1
+            term = self.store.term_bytes(h_ptr * self.store.B)
+            i = fnv1a(term) & mask
+            while self.hash[i] != 0:
+                i = (i + 1) & mask
+            self.hash[i] = v
+
+    def lookup(self, term) -> int | None:
+        """Term -> head-block slot pointer, or None."""
+        tb = term.encode() if isinstance(term, str) else term
+        hit = self._cache.get(tb)
+        if hit is not None:
+            return hit
+        h_ptr, _ = self._probe(tb)
+        return h_ptr
+
+    def _lookup_or_create(self, tb: bytes) -> int:
+        hit = self._cache.get(tb)
+        if hit is not None:
+            return hit
+        h_ptr, slot = self._probe(tb)
+        if h_ptr is None:
+            if 2 * (self.vocab_size + 1) > len(self.hash):
+                self._grow_hash()
+                _, slot = self._probe(tb)
+            h_ptr = self.store.new_head(tb)
+            self.hash[slot] = h_ptr + 1
+            self.vocab_size += 1
+        self._cache[tb] = h_ptr
+        return h_ptr
+
+    # ------------------------------------------------------------------
+    # ingest (§3.3)
+    # ------------------------------------------------------------------
+
+    def add_document(self, terms) -> int:
+        """Ingest one document (a sequence of term strings/bytes).
+
+        Returns the assigned ordinal document identifier (1-based).  The
+        document is findable by queries the moment this method returns.
+        """
+        self.num_docs += 1
+        d = self.num_docs
+        self.num_words += len(terms)
+        if self.word_level:
+            # §5.1: one posting per occurrence, in word order (w is 1-based);
+            # w-payload = w-gap since the previous same-doc occurrence.
+            last_w: dict[bytes, int] = {}
+            for w, t in enumerate(terms, start=1):
+                tb = t.encode() if isinstance(t, str) else t
+                h_ptr = self._lookup_or_create(tb)
+                prev = last_w.get(tb)
+                wgap = w if prev is None else w - prev
+                last_w[tb] = w
+                self.store.add_posting(h_ptr, d, wgap)
+                self.num_postings += 1
+        else:
+            # sort-count within the document, then one posting per term
+            counts = Counter(t.encode() if isinstance(t, str) else t
+                             for t in terms)
+            for tb, f in counts.items():
+                h_ptr = self._lookup_or_create(tb)
+                self.store.add_posting(h_ptr, d, f)
+                self.num_postings += 1
+        return d
+
+    # ------------------------------------------------------------------
+    # read access
+    # ------------------------------------------------------------------
+
+    def postings(self, term):
+        """Decode a term's postings: (docids, f) doc-level or (docids, wgaps)."""
+        h_ptr = self.lookup(term)
+        if h_ptr is None:
+            return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
+        return self.store.decode_postings(h_ptr)
+
+    def ft(self, term) -> int:
+        h_ptr = self.lookup(term)
+        if h_ptr is None:
+            return 0
+        return self.store.get_ft(h_ptr * self.store.B)
+
+    def head_ptrs(self):
+        """All head-block slot pointers (via the hash array)."""
+        return [int(v) - 1 for v in self.hash[self.hash != 0]]
+
+    def terms(self):
+        for h_ptr in self.head_ptrs():
+            yield self.store.term_bytes(h_ptr * self.store.B), h_ptr
+
+    # ------------------------------------------------------------------
+    # space accounting (Tables 7/8/11/13: "all index costs")
+    # ------------------------------------------------------------------
+
+    def hash_bytes(self) -> int:
+        return len(self.hash) * 4
+
+    def total_bytes(self) -> int:
+        return self.store.used_bytes() + self.hash_bytes()
+
+    def bytes_per_posting(self) -> float:
+        return self.total_bytes() / max(1, self.num_postings)
+
+    def breakdown(self) -> dict:
+        stats = self.store.component_breakdown(self.head_ptrs())
+        stats["hash_bytes"] = self.hash_bytes()
+        stats["total_bytes"] = self.total_bytes()
+        stats["num_postings"] = self.num_postings
+        stats["bytes_per_posting"] = self.bytes_per_posting()
+        return stats

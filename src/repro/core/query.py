@@ -1,0 +1,386 @@
+"""Query processing over the dynamic index (paper §3.6, §4.6).
+
+Two query modes, both operating on the live block structure while ingest
+continues (immediate access):
+
+  * conjunctive Boolean, document-at-a-time, with ``seek_GEQ`` skipping that
+    touches only each block's leading b-gap and n_ptr (§3.2: "an indexed
+    sequential access mode") — Culpepper & Moffat-style adaptive DAAT;
+  * top-k disjunctive ranking with the paper's TF×IDF model
+        w_{t,d} = log(1 + f_{t,d}) * log(1 + N / f_t)
+    tracked in a min-heap (§4.6).
+
+A vectorized term-at-a-time scorer and a brute-force oracle are included for
+benchmarks and tests.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from .blockstore import H, BlockStore
+from .dvbyte import dvbyte_decode_from
+from .index import DynamicIndex
+
+
+class PostingsCursor:
+    """A DAAT cursor over one term's chain supporting next()/seek_GEQ().
+
+    Maintains (docid, payload) of the current posting.  ``seek_GEQ`` advances
+    block-at-a-time using only the leading b-gap of each block — the paper's
+    skip mechanism — then decodes within the final candidate block.
+    """
+
+    __slots__ = ("store", "h_ptr", "_blocks", "_bi", "_pos", "_end",
+                 "_block_first_d", "_prev_block_first_d", "docid", "payload",
+                 "_exhausted", "_first_in_block", "_nx")
+
+    def __init__(self, store: BlockStore, h_ptr: int):
+        self.store = store
+        self.h_ptr = h_ptr
+        # materialize chain slot list once (ptr, z, is_tail)
+        self._blocks = list(store.chain_slots(h_ptr))
+        self._bi = 0
+        self._nx = store.get_nx(h_ptr * store.B)
+        self._prev_block_first_d = 0
+        self._block_first_d = 0
+        self.docid = 0
+        self.payload = 0
+        self._exhausted = False
+        self._enter_block(0)
+        self.next()
+
+    # -- block helpers ---------------------------------------------------
+
+    def _block_bounds(self, bi: int):
+        store = self.store
+        ptr, z, is_tail = self._blocks[bi]
+        base = ptr * store.B
+        if ptr == self.h_ptr:
+            start = store.head_fixed + int(store.I[base + store.head_fixed - 1])
+        else:
+            start = H
+        cap = store.B if store.const_mode else store.block_size_at(z)
+        end = base + (self._nx if is_tail else cap)
+        return base, base + start, end
+
+    def _enter_block(self, bi: int) -> None:
+        self._bi = bi
+        _, pos, end = self._block_bounds(bi)
+        self._pos = pos
+        self._end = end
+        self._first_in_block = True
+
+    def _peek_block_first_d(self, bi: int, prev_first_d: int) -> int:
+        """First docid of block bi, reading only its leading b-gap."""
+        _, pos, _ = self._block_bounds(bi)
+        (major, minor), _ = dvbyte_decode_from(self.store.I, pos,
+                                               self.store.F)
+        if self.store.word_level:
+            return prev_first_d + (minor - 1)
+        return prev_first_d + major
+
+    # -- iteration --------------------------------------------------------
+
+    def next(self) -> bool:
+        """Advance to the next posting; False when exhausted."""
+        store = self.store
+        while True:
+            if self._pos >= self._end or store.I[self._pos] == 0:
+                if self._bi + 1 >= len(self._blocks):
+                    self._exhausted = True
+                    return False
+                self._prev_block_first_d = self._block_first_d
+                self._enter_block(self._bi + 1)
+                continue
+            (major, minor), self._pos = dvbyte_decode_from(
+                store.I, self._pos, store.F)
+            if store.word_level:
+                g = minor - 1
+                self.payload = major
+            else:
+                g = major
+                self.payload = minor
+            if self._first_in_block and self._bi > 0:
+                self.docid = self._prev_block_first_d + g  # b-gap
+            else:
+                self.docid = self.docid + g
+            if self._first_in_block:
+                self._block_first_d = self.docid
+                self._first_in_block = False
+            return True
+
+    def seek_geq(self, target: int) -> bool:
+        """Position on the first posting with docid >= target."""
+        if self._exhausted:
+            return False
+        # fast block skip: hop while the NEXT block still starts <= target
+        while self._bi + 1 < len(self._blocks):
+            nxt_first = self._peek_block_first_d(self._bi + 1,
+                                                 self._block_first_d)
+            if nxt_first <= target:
+                self._prev_block_first_d = self._block_first_d
+                self._enter_block(self._bi + 1)
+                self.docid = 0  # will be set by the b-gap on first next()
+                self.next()
+                self._block_first_d = self.docid
+            else:
+                break
+        while self.docid < target:
+            if not self.next():
+                return False
+        return True
+
+    @property
+    def exhausted(self) -> bool:
+        return self._exhausted
+
+
+# --------------------------------------------------------------------------
+# conjunctive Boolean (DAAT with skipping)
+# --------------------------------------------------------------------------
+
+
+def conjunctive_query(index: DynamicIndex, terms) -> np.ndarray:
+    """All docids containing every query term (sorted ascending)."""
+    ptrs = []
+    for t in terms:
+        h = index.lookup(t)
+        if h is None:
+            return np.zeros(0, dtype=np.int64)
+        ptrs.append(h)
+    cursors = [PostingsCursor(index.store, h) for h in ptrs]
+    # rarest-first ordering minimizes candidate count
+    cursors.sort(key=lambda c: index.store.get_ft(c.h_ptr * index.store.B))
+    out = []
+    lead = cursors[0]
+    while not lead.exhausted:
+        d = lead.docid
+        ok = True
+        for c in cursors[1:]:
+            if not c.seek_geq(d):
+                return np.asarray(out, dtype=np.int64)
+            if c.docid != d:
+                ok = False
+                d = c.docid  # next candidate
+                break
+        if ok:
+            out.append(d)
+            if not lead.next():
+                break
+        else:
+            if not lead.seek_geq(d):
+                break
+    return np.asarray(out, dtype=np.int64)
+
+
+# --------------------------------------------------------------------------
+# ranked disjunctive top-k (§4.6)
+# --------------------------------------------------------------------------
+
+
+def tfidf_weight(f_td: np.ndarray, f_t: int, N: int) -> np.ndarray:
+    return np.log1p(f_td) * np.log1p(N / f_t)
+
+
+def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10):
+    """DAAT top-k with a min-heap of "best seen so far" (paper §4.6).
+
+    Returns (docids, scores) sorted by descending score.
+    """
+    N = index.num_docs
+    cursors = []
+    idfs = []
+    for t in terms:
+        h = index.lookup(t)
+        if h is None:
+            continue
+        c = PostingsCursor(index.store, h)
+        cursors.append(c)
+        idfs.append(np.log1p(N / index.store.get_ft(h * index.store.B)))
+    if not cursors:
+        return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
+    heap: list[tuple[float, int]] = []  # (score, docid) min-heap
+    while True:
+        # candidate = min current docid among live cursors
+        live = [c for c in cursors if not c.exhausted]
+        if not live:
+            break
+        d = min(c.docid for c in live)
+        score = 0.0
+        for c, idf in zip(cursors, idfs):
+            if not c.exhausted and c.docid == d:
+                score += np.log1p(c.payload) * idf
+                c.next()
+        if len(heap) < k:
+            heapq.heappush(heap, (score, -d))
+        elif score > heap[0][0]:
+            heapq.heapreplace(heap, (score, -d))
+    items = sorted(heap, key=lambda x: (-x[0], -x[1]))
+    return (np.asarray([-d for _, d in items], dtype=np.int64),
+            np.asarray([s for s, _ in items], dtype=np.float64))
+
+
+def ranked_disjunctive_taat(index: DynamicIndex, terms, k: int = 10):
+    """Vectorized term-at-a-time scorer (identical results, numpy-fast).
+
+    The paper notes (§4.2) TAAT shares the document-sorted index requirement,
+    so this is a legitimate execution strategy over the same structure.
+    """
+    N = index.num_docs
+    scores = np.zeros(N + 1, dtype=np.float64)
+    touched = False
+    for t in terms:
+        docids, fs = index.postings(t)
+        if len(docids) == 0:
+            continue
+        touched = True
+        scores[docids] += tfidf_weight(fs, len(docids), N)
+    if not touched:
+        return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
+    nz = np.flatnonzero(scores)
+    if len(nz) > k:
+        top = nz[np.argpartition(scores[nz], -k)[-k:]]
+    else:
+        top = nz
+    order = np.lexsort((-top, scores[top]))[::-1]
+    top = top[order]
+    return top.astype(np.int64), scores[top]
+
+
+# --------------------------------------------------------------------------
+# brute-force oracle (tests)
+# --------------------------------------------------------------------------
+
+
+def brute_conjunctive(index: DynamicIndex, terms) -> np.ndarray:
+    sets = []
+    for t in terms:
+        docids, _ = index.postings(t)
+        sets.append(set(int(x) for x in docids))
+    if not sets:
+        return np.zeros(0, dtype=np.int64)
+    inter = set.intersection(*sets)
+    return np.asarray(sorted(inter), dtype=np.int64)
+
+
+# --------------------------------------------------------------------------
+# BM25 ranked querying (paper §6.2's stated future work)
+# --------------------------------------------------------------------------
+#
+# "Our immediate next goal will be to consider how to integrate responsive
+#  querying modes ... using similarity scoring models such as BM25."
+# The only extra state BM25 needs beyond the paper's index is the document-
+# length array, which §3.6 explicitly places outside the core index ("we
+# consider that to be not part of the core inverted index").  DynamicIndex
+# callers maintain it trivially at ingest: doclens.append(len(terms)).
+
+
+def bm25_weight(f_td, doclen, avg_len, f_t, N, k1=0.9, b=0.4):
+    idf = np.log(1.0 + (N - f_t + 0.5) / (f_t + 0.5))
+    tf = (f_td * (k1 + 1.0)) / (
+        f_td + k1 * (1.0 - b + b * doclen / max(avg_len, 1e-9)))
+    return idf * tf
+
+
+def ranked_bm25(index: DynamicIndex, terms, doclens: np.ndarray,
+                k: int = 10, k1: float = 0.9, b: float = 0.4):
+    """Top-k BM25 over the dynamic index (TAAT; doclens is 1-indexed via
+    position 0 padding).  Returns (docids, scores) by descending score."""
+    N = index.num_docs
+    avg = float(doclens[1:N + 1].mean()) if N else 0.0
+    scores = np.zeros(N + 1, dtype=np.float64)
+    for t in terms:
+        docids, fs = index.postings(t)
+        if len(docids) == 0:
+            continue
+        scores[docids] += bm25_weight(
+            fs.astype(np.float64), doclens[docids], avg, len(docids), N,
+            k1, b)
+    nz = np.flatnonzero(scores)
+    if len(nz) > k:
+        nz = nz[np.argpartition(scores[nz], -k)[-k:]]
+    order = np.argsort(-scores[nz], kind="stable")
+    top = nz[order]
+    return top.astype(np.int64), scores[top]
+
+
+# --------------------------------------------------------------------------
+# phrase querying over the word-level index (the paper's §1.1 motivation
+# for word-level postings: "to support phrase or proximity querying modes")
+# --------------------------------------------------------------------------
+
+
+def _word_positions(index: DynamicIndex, term):
+    """(docids, absolute word positions) for a word-level index term."""
+    docids, wgaps = index.postings(term)
+    ws = np.empty(len(docids), dtype=np.int64)
+    last: dict[int, int] = {}
+    for i, (d, wg) in enumerate(zip(docids, wgaps)):
+        w = last.get(int(d), 0) + int(wg)
+        last[int(d)] = w
+        ws[i] = w
+    return docids, ws
+
+
+def phrase_query(index: DynamicIndex, terms) -> np.ndarray:
+    """Documents containing ``terms`` as a consecutive phrase (word-level
+    index required).  Positional join: doc matches iff for every i there is
+    an occurrence of terms[i] at position p0+i."""
+    if not index.word_level:
+        raise ValueError("phrase_query needs a word-level index (§5.1)")
+    if not terms:
+        return np.zeros(0, dtype=np.int64)
+    d0, w0 = _word_positions(index, terms[0])
+    # candidate set: (doc, start position) pairs for the first term
+    cand = set(zip(d0.tolist(), w0.tolist()))
+    for i, t in enumerate(terms[1:], start=1):
+        di, wi = _word_positions(index, t)
+        here = set(zip(di.tolist(), (wi - i).tolist()))
+        cand &= here
+        if not cand:
+            return np.zeros(0, dtype=np.int64)
+    return np.asarray(sorted({d for d, _ in cand}), dtype=np.int64)
+
+
+def proximity_query(index: DynamicIndex, terms, window: int) -> np.ndarray:
+    """Documents where all terms co-occur within ``window`` words."""
+    if not index.word_level:
+        raise ValueError("proximity_query needs a word-level index")
+    per_doc: dict[int, list[np.ndarray]] = {}
+    for t in terms:
+        di, wi = _word_positions(index, t)
+        by_doc: dict[int, list[int]] = {}
+        for d, w in zip(di.tolist(), wi.tolist()):
+            by_doc.setdefault(d, []).append(w)
+        for d, ws in by_doc.items():
+            per_doc.setdefault(d, []).append(np.asarray(ws))
+    out = []
+    for d, lists in per_doc.items():
+        if len(lists) != len(terms):
+            continue
+        # exact sliding-window sweep over the merged position list
+        positions = np.concatenate(lists)
+        labels = np.concatenate(
+            [np.full(len(ws), i) for i, ws in enumerate(lists)])
+        order = np.argsort(positions)
+        positions, labels = positions[order], labels[order]
+        need = len(terms)
+        seen: dict[int, int] = {}
+        left = 0
+        found = False
+        for right in range(len(positions)):
+            seen[labels[right]] = seen.get(labels[right], 0) + 1
+            while positions[right] - positions[left] > window:
+                seen[labels[left]] -= 1
+                if seen[labels[left]] == 0:
+                    del seen[labels[left]]
+                left += 1
+            if len(seen) == need:
+                found = True
+                break
+        if found:
+            out.append(d)
+    return np.asarray(sorted(out), dtype=np.int64)

@@ -1,0 +1,150 @@
+"""Distributed immediate-access index: document-partitioned shard_map query.
+
+This realizes the paper's Figure 2 at datacenter scale.  Each device owns one
+*dynamic sub-shard* (a collated device image of its slice of the document
+stream); ingest is a host-side concern (one writer per shard); queries fan
+out to every shard and the per-shard top-k results are fused:
+
+  mesh axes:  "data" (and "pod" when multi-pod) partition the document space;
+              "model" partitions the query batch.
+
+  query:      replicated over data/pod, sharded over model
+  index:      sharded over (pod, data), replicated over model
+  execution:  local decode+score (device_index.query_step)
+              -> local top-k
+              -> all_gather over (pod, data)
+              -> merge top-k            (the paper's "results fused")
+
+Conjunctive queries need no merge at all (docid spaces are disjoint): the
+local hit bitmaps concatenate, so the collective is a pure reshard.
+
+Local docids are 1..N_shard; global ids are formed as
+``shard_rank * N_shard + local`` inside the mapped function.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .device_index import DeviceIndex, decode_blocks, query_step
+
+shard_map = jax.shard_map
+
+
+def stack_images(images: list[DeviceIndex]) -> DeviceIndex:
+    """Concatenate per-shard images along a leading shard axis.
+
+    All shards must share (V, B) and are padded to the max block count.
+    """
+    nb = max(int(im.blocks.shape[0]) for im in images)
+    B = images[0].blocks.shape[1]
+
+    def padb(x):
+        return jnp.pad(x, ((0, nb - x.shape[0]), (0, 0)))
+
+    return DeviceIndex(
+        blocks=jnp.concatenate([padb(im.blocks) for im in images]),
+        term_slot=jnp.concatenate([im.term_slot for im in images]),
+        term_nblk=jnp.concatenate([im.term_nblk for im in images]),
+        term_skip=jnp.concatenate([im.term_skip for im in images]),
+        term_nx=jnp.concatenate([im.term_nx for im in images]),
+        term_ft=jnp.concatenate([im.term_ft for im in images]),
+        num_docs=max(im.num_docs for im in images),
+        F=images[0].F)
+
+
+def make_sharded_query_step(mesh, *, k: int = 10, max_blocks: int = 64,
+                            num_docs: int = 1 << 20, F: int = 4,
+                            decode_fn=None, mode: str = "ranked"):
+    """Build the jitted sharded query step for ``mesh``.
+
+    Index arrays are sharded over the document axes ("pod","data"), the query
+    batch over "model".  Returns (fn, in_shardings, out_shardings) ready for
+    ``jax.jit(...).lower()`` — launch/dryrun.py lowers exactly this.  The
+    mapped function takes the six image arrays explicitly (pytree aux fields
+    cannot carry shardings): fn(blocks, slot, nblk, skip, nx, ft, qt, qm).
+    """
+    doc_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    img_specs = (P(doc_axes, None), P(doc_axes), P(doc_axes), P(doc_axes),
+                 P(doc_axes), P(doc_axes))
+    q_spec = P("model", None)
+
+    if mode == "conjunctive":
+        # Boolean AND needs no score fusion at all: docid spaces are
+        # disjoint, so the per-shard hit bitmaps simply tile the global
+        # docid axis — output stays sharded (model x doc-axes), zero
+        # cross-shard traffic beyond the replicated query broadcast.
+        def fn_conj(blocks, slot, nblk, skip, nx, ft, qterms, qmask):
+            image = DeviceIndex(blocks, slot, nblk, skip, nx, ft,
+                                num_docs=num_docs, F=F)
+            matches, counts = query_step(
+                image, qterms, qmask, k=k, mode="conjunctive",
+                max_blocks=max_blocks, decode_fn=decode_fn)
+            total = counts
+            for ax in doc_axes:
+                total = jax.lax.psum(total, ax)
+            return matches, total
+
+        in_specs = img_specs + (q_spec, q_spec)
+        out_specs = (P("model", doc_axes), P("model"))
+        mapped = shard_map(fn_conj, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+        in_sharding = tuple(jax.NamedSharding(mesh, s) for s in in_specs)
+        out_sharding = tuple(jax.NamedSharding(mesh, s) for s in out_specs)
+        return mapped, in_sharding, out_sharding
+
+    def fn(blocks, slot, nblk, skip, nx, ft, qterms, qmask):
+        image = DeviceIndex(blocks, slot, nblk, skip, nx, ft,
+                            num_docs=num_docs, F=F)
+        local_d, local_s = query_step(
+            image, qterms, qmask, k=k, mode=mode,
+            max_blocks=max_blocks, decode_fn=decode_fn)
+        # globalize docids by shard rank over the document axes
+        rank = jnp.int32(0)
+        nshards = 1
+        for ax in doc_axes:
+            rank = rank * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            nshards *= jax.lax.axis_size(ax)
+        global_d = jnp.where(local_d > 0,
+                             local_d + rank * jnp.int32(image.num_docs), 0)
+        # fuse: all-gather the per-shard top-k and re-select
+        gs = local_s
+        gd = global_d
+        for ax in doc_axes:
+            gs = jax.lax.all_gather(gs, ax, axis=0, tiled=False)
+            gd = jax.lax.all_gather(gd, ax, axis=0, tiled=False)
+        gs = gs.reshape(-1, local_s.shape[-2], k)    # (S, Qloc, k)
+        gd = gd.reshape(-1, local_d.shape[-2], k)
+        gs = jnp.moveaxis(gs, 0, 1).reshape(local_s.shape[-2], -1)
+        gd = jnp.moveaxis(gd, 0, 1).reshape(local_d.shape[-2], -1)
+        top_s, pos = jax.lax.top_k(gs, k)
+        top_d = jnp.take_along_axis(gd, pos, axis=1)
+        return top_d, top_s
+
+    # NB: shard_map requires explicit specs for every input leaf
+    in_specs = img_specs + (q_spec, q_spec)
+    out_specs = (P("model", None), P("model", None))
+    mapped = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    in_sharding = tuple(jax.NamedSharding(mesh, s) for s in in_specs)
+    out_sharding = tuple(jax.NamedSharding(mesh, s) for s in out_specs)
+    return mapped, in_sharding, out_sharding
+
+
+def sharded_input_specs(mesh, *, shard_blocks: int, B: int = 64,
+                        vocab: int = 1 << 17, qbatch: int = 256,
+                        qterms: int = 8, num_docs: int = 1 << 20):
+    """ShapeDtypeStruct stand-ins for the sharded query step (dry-run)."""
+    nshards = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            nshards *= mesh.shape[ax]
+    meta = jax.ShapeDtypeStruct((nshards * vocab,), jnp.int32)
+    q = jax.ShapeDtypeStruct((qbatch, qterms), jnp.int32)
+    m = jax.ShapeDtypeStruct((qbatch, qterms), jnp.bool_)
+    return (jax.ShapeDtypeStruct((nshards * shard_blocks, B), jnp.uint8),
+            meta, meta, meta, meta, meta, q, m)

@@ -1,0 +1,57 @@
+"""Recsys data substrate: synthetic Criteo-like batches + table specs.
+
+DLRM table sizes follow the MLPerf Criteo-1TB configuration (row counts
+capped at 40M, 26 sparse fields); sampling is deterministic per step for
+fault-tolerant replay, power-law over rows (real CTR id traffic is heavily
+skewed, which is what makes the embedding lookup the hot path).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# MLPerf DLRM (Criteo 1TB, day-sharded) per-field row counts, 40M cap.
+CRITEO_TABLE_ROWS = [
+    40_000_000, 39_060, 17_295, 7_424, 20_265, 3, 7_122, 1_543, 63,
+    40_000_000, 3_067_956, 405_282, 10, 2_209, 11_938, 155, 4, 976, 14,
+    40_000_000, 40_000_000, 40_000_000, 590_152, 12_973, 108, 36,
+]
+N_DENSE = 13
+N_SPARSE = 26
+
+
+class RecsysBatches:
+    """Deterministic synthetic (dense, sparse ids, label) batches."""
+
+    def __init__(self, batch: int, table_rows=None, n_dense: int = N_DENSE,
+                 seed: int = 0, hist_len: int = 0):
+        self.batch = batch
+        self.table_rows = list(table_rows or CRITEO_TABLE_ROWS)
+        self.n_dense = n_dense
+        self.seed = seed
+        self.hist_len = hist_len
+
+    def batch_at(self, step: int):
+        rng = np.random.default_rng((self.seed << 32) ^ step)
+        dense = rng.lognormal(0.0, 1.0,
+                              (self.batch, self.n_dense)).astype(np.float32)
+        sparse = np.stack([
+            (rng.zipf(1.2, self.batch).astype(np.int64) - 1) % rows
+            for rows in self.table_rows], axis=1).astype(np.int32)
+        label = (rng.random(self.batch) < 0.25).astype(np.float32)
+        out = {"dense": dense, "sparse": sparse, "label": label}
+        if self.hist_len:
+            out["history"] = rng.integers(
+                0, self.table_rows[0],
+                (self.batch, self.hist_len)).astype(np.int32)
+            out["hist_mask"] = (rng.random(
+                (self.batch, self.hist_len)) < 0.8).astype(np.float32)
+            out["target"] = rng.integers(
+                0, self.table_rows[0], self.batch).astype(np.int32)
+        return out
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,2 @@
+from .sharding import lm_param_rules, constrain  # noqa: F401
+from .compression import compress_int8, decompress_int8, ErrorFeedback  # noqa: F401

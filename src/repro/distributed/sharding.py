@@ -1,0 +1,115 @@
+"""Sharding rules: logical-axis -> mesh-axis mapping per architecture family.
+
+Mesh axes (launch/mesh.py): ("data", "model") single pod, ("pod", "data",
+"model") multi-pod.  Policy:
+
+  * LM dense — FSDP: every weight matrix shards its d_model-sized dim over
+    "data" (ZeRO-3; XLA inserts per-layer all-gathers), and its heads/ff/vocab
+    dim over "model" (tensor parallel, Megatron-style pairing in/out
+    projections so each block needs one reduce per sub-layer).  The "pod"
+    axis extends data parallelism — gradient all-reduce crosses the pod link
+    once per step.
+  * LM MoE — experts shard over "model" (EP); within-expert weights shard
+    over "data" (FSDP).  Dispatch/combine lower to all-to-alls over "model".
+  * Embedding tables (LM vocab, recsys rows) — row-sharded over the whole
+    mesh when huge (recsys: "data"+"model" flattened), or over "model"
+    (LM vocab, pairing with the final projection).
+  * Activations — batch over ("pod","data"); long-sequence shapes optionally
+    shard the sequence dim over "model" (sequence parallelism) between
+    attention blocks.
+
+Rules are expressed as regex -> PartitionSpec over *logical* names, resolved
+to mesh axes here, so configs stay declarative.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axes(mesh, *names):
+    """Filter mesh-axis names to those present (pod optional)."""
+    got = []
+    for n in names:
+        if isinstance(n, tuple):
+            sub = tuple(x for x in n if x in mesh.axis_names)
+            got.append(sub if sub else None)
+        else:
+            got.append(n if n in mesh.axis_names else None)
+    return got
+
+
+def lm_param_rules(mesh) -> list[tuple[str, P]]:
+    """(regex, PartitionSpec) table for transformer parameter pytree paths."""
+    d, m = "data", "model"
+    return [
+        (r"embed", P(m, d)),                       # (V, D)
+        (r"(wq|wk|wv)$", P(None, d, m)),           # (L, D, H*dh)
+        (r"wo$", P(None, m, d)),                   # (L, H*dh, D)
+        (r"(w_gate|w_up)$", P(None, d, m)),        # (L, D, F)
+        (r"w_down$", P(None, m, d)),               # (L, F, D)
+        (r"router$", P(None, d, None)),            # (L, D, E)
+        (r"(moe_w_gate|moe_w_up)$", P(None, m, d, None)),   # (L, E, D, F)
+        (r"moe_w_down$", P(None, m, None, d)),     # (L, E, F, D)
+        (r"(norm|scale|ln)", P(None)),             # (L, D) / (D,)
+        (r"out_proj$", P(d, m)),                   # (D, V)
+        (r".*", P()),
+    ]
+
+
+def spec_for(path: str, rules) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return P()
+
+
+def tree_shardings(params_shape, mesh, rules):
+    """Map a pytree of ShapeDtypeStruct/arrays to NamedShardings via rules."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        spec = spec_for(name, rules)
+        # drop axes the leaf cannot accommodate
+        if len(spec) > leaf.ndim:
+            spec = P(*spec[: leaf.ndim])
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def constrain(x, mesh, *spec):
+    """with_sharding_constraint with absent-axis tolerance."""
+    cleaned = []
+    for s in spec:
+        if s is None:
+            cleaned.append(None)
+        elif isinstance(s, tuple):
+            sub = tuple(a for a in s if a in mesh.axis_names)
+            cleaned.append(sub if sub else None)
+        else:
+            cleaned.append(s if s in mesh.axis_names else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*cleaned)))
+
+
+def batch_axes(mesh):
+    """The data-parallel axes tuple — ("pod","data") when multi-pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def remesh(tree, new_mesh, rules):
+    """Elastic re-scaling: move a (possibly sharded) pytree onto a new mesh.
+
+    Used when the device pool grows/shrinks: the same rule table re-resolves
+    against the new mesh and arrays are device_put with the new shardings —
+    XLA performs the minimal resharding collective.
+    """
+    shardings = tree_shardings(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree),
+        new_mesh, rules)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

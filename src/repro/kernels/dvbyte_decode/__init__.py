@@ -1,0 +1,1 @@
+from .ops import dvbyte_decode_blocks  # noqa: F401

@@ -1,0 +1,33 @@
+"""Jitted public entry point for the Double-VByte decode kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import DEFAULT_TILE, dvbyte_decode_kernel
+
+
+@partial(jax.jit, static_argnames=("F", "tile", "interpret"))
+def dvbyte_decode_blocks(blocks, start, end, F: int = 4,
+                         tile: int = DEFAULT_TILE, interpret: bool = True):
+    """Decode a batch of B-byte Double-VByte blocks on TPU.
+
+    Drop-in replacement for ``repro.core.device_index.decode_blocks`` (pass
+    it as ``decode_fn`` to ``query_step``).  ``interpret=True`` executes the
+    kernel body in Python on CPU; on a real TPU pass ``interpret=False``.
+    """
+    return dvbyte_decode_kernel(blocks, start, end, F, tile=tile,
+                                interpret=interpret)
+
+
+def as_decode_fn(F: int = 4, tile: int = DEFAULT_TILE,
+                 interpret: bool = True):
+    """Adapter matching the ``decode_fn(blocks, start, end, F)`` signature."""
+
+    def fn(blocks, start, end, F_):
+        return dvbyte_decode_kernel(blocks, start, end, F_, tile=tile,
+                                    interpret=interpret)
+
+    return fn

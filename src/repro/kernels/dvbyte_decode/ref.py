@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the Double-VByte block-decode kernel.
+
+This simply re-exports the device engine's reference implementation
+(repro.core.device_index.decode_blocks): the kernel must produce bit-identical
+(g, f, valid) triples for any block content the block store can emit.
+"""
+
+from repro.core.device_index import decode_blocks as decode_blocks_ref
+
+__all__ = ["decode_blocks_ref"]

@@ -1,0 +1,17 @@
+"""Jitted public entry point for the intersection kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import DEFAULT_TILE, intersect_kernel
+
+
+@partial(jax.jit, static_argnames=("tile_a", "tile_b", "interpret"))
+def intersect_sorted(a, b, tile_a: int = DEFAULT_TILE,
+                     tile_b: int = DEFAULT_TILE, interpret: bool = True):
+    """Membership flags of sorted int32 list ``a`` in sorted list ``b``."""
+    return intersect_kernel(a, b, tile_a=tile_a, tile_b=tile_b,
+                            interpret=interpret)

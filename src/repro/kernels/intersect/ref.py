@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the sorted-intersection kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAD = jnp.iinfo(jnp.int32).max
+
+
+def intersect_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """flags[i] = a[i] ∈ b via searchsorted (sorted b, PAD-padded)."""
+    idx = jnp.searchsorted(b, a)
+    idx = jnp.clip(idx, 0, b.shape[0] - 1)
+    return (b[idx] == a) & (a != PAD)

@@ -1,0 +1,1 @@
+from .ops import candidate_scores  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the retrieval-dot kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def retrieval_dot_ref(q: jnp.ndarray, cand: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("qd,nd->qn", q.astype(jnp.float32),
+                      cand.astype(jnp.float32))

@@ -1,0 +1,1 @@
+from .ops import score_accumulate  # noqa: F401

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the score-accumulation kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def score_ref(docids: jnp.ndarray, weights: jnp.ndarray,
+              n_docs: int) -> jnp.ndarray:
+    out = jnp.zeros(n_docs, jnp.float32).at[docids].add(weights)
+    return out.at[0].set(0.0)  # docid 0 is the padding bucket

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  For every cell we record:
+
+  * ``compiled.memory_analysis()``   — proves the cell fits per-device HBM;
+  * ``compiled.cost_analysis()``     — HLO FLOPs / bytes for §Roofline;
+  * collective bytes parsed from the compiled HLO (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute operand sizes) —
+    cost_analysis does not report them;
+  * the analytic MODEL_FLOPS from the config, for the useful-compute ratio.
+
+Results append to results/dryrun/<arch>__<shape>__<mesh>.json; re-runs skip
+existing cells unless --force.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mistral-large-123b \
+        --shape train_4k --mesh single
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+# per-chip link-traffic multiplier on the op's result bytes (ring algorithms)
+_COLL_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    Returns {"by_op": {...}, "link_bytes": weighted per-chip traffic}."""
+    by_op: dict[str, float] = {}
+    link = 0.0
+    for m in _COLL_RE.finditer(hlo_text):
+        _, dtype, dims, op = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * _DTYPE_BYTES[dtype]
+        by_op[op] = by_op.get(op, 0.0) + b
+        link += _COLL_FACTOR[op] * b
+    return {"by_op": by_op, "link_bytes": link}
+
+
+def run_cell(arch_id: str, shape_id: str, mesh_kind: str,
+             out_dir: str = RESULTS_DIR, force: bool = False,
+             verbose: bool = True, probe_layers: int | None = None) -> dict:
+    """Lower + compile one cell.  ``mesh_kind`` ∈ {single, multi}; probe
+    cells (LM only) lower unrolled probe_layers variants on the single-pod
+    mesh for exact FLOP counting (XLA cost_analysis counts while bodies
+    once; see EXPERIMENTS.md §Roofline methodology)."""
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch_id.replace('/', '_')}__{shape_id}__{mesh_kind}"
+    if probe_layers is not None:
+        tag = f"{arch_id.replace('/', '_')}__{shape_id}__probe{probe_layers}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    rec = {"arch": arch_id, "shape": shape_id, "mesh": mesh_kind,
+           "probe_layers": probe_layers, "status": "error"}
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        arch = get_arch(arch_id)
+        if probe_layers is not None:
+            cell = arch.build(mesh, shape_id, probe_layers=probe_layers)
+        else:
+            cell = arch.build(mesh, shape_id)
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            coll = collective_bytes(compiled.as_text())
+        rec.update(
+            status="ok",
+            kind=cell.kind,
+            chips=int(mesh.devices.size),
+            model_flops=cell.model_flops,
+            cost_scale=getattr(cell, "cost_scale", 1.0),
+            hlo_flops=float(ca.get("flops", 0.0)),
+            hlo_bytes=float(ca.get("bytes accessed", 0.0)),
+            collectives=coll,
+            memory=dict(
+                argument_bytes=int(ma.argument_size_in_bytes),
+                output_bytes=int(ma.output_size_in_bytes),
+                temp_bytes=int(ma.temp_size_in_bytes),
+                generated_code_bytes=int(ma.generated_code_size_in_bytes),
+                alias_bytes=int(ma.alias_size_in_bytes),
+            ),
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            notes=cell.notes,
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        status = rec["status"]
+        extra = (f"flops={rec.get('hlo_flops', 0):.3e} "
+                 f"temp={rec.get('memory', {}).get('temp_bytes', 0)/2**30:.2f}GiB"
+                 if status == "ok" else rec.get("error", ""))
+        print(f"[dryrun] {tag}: {status} ({time.time()-t0:.1f}s) {extra}",
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="lower LM roofline probes (unrolled L=1,2)")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+    arch_ids = ARCH_IDS if args.arch == "all" else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for arch_id in arch_ids:
+        arch = get_arch(arch_id)
+        shapes = list(arch.shapes) if args.shape == "all" else [args.shape]
+        for shape_id in shapes:
+            if args.probe:
+                if arch.family != "lm":
+                    continue  # non-LM cells are unrolled-exact already
+                for pl in (1, 2):
+                    rec = run_cell(arch_id, shape_id, "single",
+                                   out_dir=args.out, force=args.force,
+                                   probe_layers=pl)
+                    failures += rec["status"] != "ok"
+                continue
+            for mesh_kind in meshes:
+                rec = run_cell(arch_id, shape_id, mesh_kind,
+                               out_dir=args.out, force=args.force)
+                failures += rec["status"] != "ok"
+    print(f"[dryrun] done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,626 @@
+"""Transformer LM family: dense + MoE, GQA, RoPE, SwiGLU.
+
+One implementation covers all five assigned LM architectures (llama4-scout,
+granite-moe, granite-3-2b, llama3.2-3b, mistral-large).  Engineering points
+that matter at 512 chips:
+
+  * **scan over layers** — parameters are stacked (L, ...) and the block is a
+    single ``lax.scan`` body (+ ``jax.checkpoint`` remat), so HLO size and
+    compile time are O(1) in depth (88-layer mistral compiles as fast as a
+    2-layer toy);
+  * **flash-style attention** — nested q-chunk/kv-chunk scan with running
+    (max, denom, acc); no (S, S) score tensor ever materializes, making the
+    32k-prefill shapes fit VMEM-sized tiles;
+  * **sort-based MoE dispatch** — argsort tokens by expert, capacity-clip,
+    scatter/gather rows; no one-hot dispatch einsum, so compiled FLOPs stay
+    ≈ useful FLOPs (the dispatch is pure data movement, visible in the
+    roofline's memory term instead — where it belongs);
+  * **vocab-sharded chunked loss** — logits are built seq-chunk at a time
+    with the vocab dim sharded over "model"; the full (B, S, V) tensor never
+    exists;
+  * **decode path** — serve_step attends one new token against a KV cache
+    laid out (L, B, S, kv*dh) so the head dim shards evenly over "model"
+    even when kv_heads < mesh width.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    moe: MoEConfig | None = None
+    rope_theta: float = 500_000.0
+    dtype: Any = jnp.bfloat16
+    # execution knobs (hillclimb surface)
+    q_chunk: int = 256
+    kv_chunk: int = 1024
+    loss_chunk: int = 512
+    microbatch: int = 1          # grad-accumulation factor
+    remat: bool = True
+    pad_multiple: int = 512      # mesh-divisibility padding (vocab, experts)
+    # layer-boundary activation sharding: "dmodel" won the §Perf H3 sweep
+    # (6.5x less weight-gather traffic than "seq" at equal memory; "none"
+    # is the no-remat-sharding baseline and OOMs at 88 layers)
+    act_shard: str = "dmodel"    # none|seq|dmodel
+    opt_dtype: Any = jnp.float32  # AdamW moment dtype (bf16 halves opt mem)
+    # roofline probe mode: XLA cost_analysis counts while-loop bodies ONCE,
+    # so for §Roofline the dry-run lowers "probe" variants with all loops
+    # unrolled at probe_layers ∈ {1, 2} and extrapolates linearly in L.
+    probe_layers: int | None = None
+    probe_unroll: bool = False
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up so (V/model)·(D/data) shardings divide evenly —
+        the MaxText-style embedding pad; padded logit columns are masked to
+        -inf in the loss."""
+        m = self.pad_multiple
+        return (self.vocab + m - 1) // m * m
+
+    @property
+    def n_experts_padded(self) -> int:
+        """Experts rounded up to the tensor-axis width (16); padded experts
+        receive zero tokens (router indices stay < n_experts)."""
+        if not self.moe:
+            return 0
+        return (self.moe.n_experts + 15) // 16 * 16
+
+    @property
+    def params_count(self) -> int:
+        D, H, KV, dh, Fd, V, L = (self.d_model, self.n_heads,
+                                  self.n_kv_heads, self.d_head, self.d_ff,
+                                  self.vocab, self.n_layers)
+        attn = D * H * dh + 2 * D * KV * dh + H * dh * D
+        if self.moe:
+            ff = self.moe.n_experts * 3 * D * Fd + D * self.moe.n_experts
+        else:
+            ff = 3 * D * Fd
+        return L * (attn + ff + 2 * D) + V * D + D * V + D
+
+    @property
+    def active_params_count(self) -> int:
+        if not self.moe:
+            return self.params_count
+        D, Fd, L = self.d_model, self.d_ff, self.n_layers
+        full = self.params_count
+        ff_all = L * self.moe.n_experts * 3 * D * Fd
+        ff_act = L * self.moe.top_k * 3 * D * Fd
+        return full - ff_all + ff_act
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    D, H, KV, dh, Fd, V, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.d_head, cfg.d_ff, cfg.vocab, cfg.n_layers)
+    k = jax.random.split(key, 12)
+    s = lambda *sh: (1.0 / math.sqrt(sh[-2])) if len(sh) >= 2 else 0.02
+    dt = cfg.dtype
+
+    def rnd(i, *sh):
+        return (jax.random.normal(k[i % 12], sh, jnp.float32)
+                * 0.02).astype(dt)
+
+    layers = {
+        "wq": rnd(0, L, D, H * dh), "wk": rnd(1, L, D, KV * dh),
+        "wv": rnd(2, L, D, KV * dh), "wo": rnd(3, L, H * dh, D),
+        "ln1": jnp.ones((L, D), dt), "ln2": jnp.ones((L, D), dt),
+    }
+    if cfg.moe:
+        E = cfg.moe.n_experts
+        Ep = cfg.n_experts_padded
+        layers.update({
+            "router": rnd(4, L, D, E),
+            "moe_w_gate": rnd(5, L, Ep, D, Fd),
+            "moe_w_up": rnd(6, L, Ep, D, Fd),
+            "moe_w_down": rnd(7, L, Ep, Fd, D),
+        })
+    else:
+        layers.update({
+            "w_gate": rnd(4, L, D, Fd), "w_up": rnd(5, L, D, Fd),
+            "w_down": rnd(6, L, Fd, D),
+        })
+    Vp = cfg.vocab_padded
+    return {
+        "embed": rnd(8, Vp, D),
+        "layers": layers,
+        "ln_f": jnp.ones((D,), dt),
+        "out_proj": rnd(9, D, Vp),
+    }
+
+
+def params_shape(cfg: LMConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(
+        x.dtype) * scale
+
+
+def rope(x, positions, theta):
+    """x: (..., S, H, dh); rotate pairs along dh."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int,
+                    unroll: bool = False):
+    """Memory-bounded attention: q (B,S,H,dh), k/v (B,S,KV,dh) -> (B,S,H,dh).
+
+    GQA broadcast happens per-tile; running-softmax accumulators keep only
+    (B, qc, H, kvc) alive.  ``unroll=True`` materializes the chunk loops as
+    straight-line HLO (probe mode: exact FLOP counting; callers pass large
+    chunks so the unroll factor stays small).
+    """
+    q_chunk = min(q_chunk, q.shape[1])
+    kv_chunk = min(kv_chunk, k.shape[1])
+    if unroll:
+        return _flash_unrolled(q, k, v, causal=causal, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk)
+    B, S, Hq, dh = q.shape
+    KV = k.shape[2]
+    rep = Hq // KV
+    scale = 1.0 / math.sqrt(dh)
+    nq = S // q_chunk
+    nk = S // kv_chunk
+
+    q = q.reshape(B, nq, q_chunk, Hq, dh)
+
+    # Recursive remat: without it the scan-of-scan backward materializes the
+    # (B,H,qc,kvc) probability tile for every (q,kv) pair simultaneously
+    # (~nq*nk*p_tile — 12+ GiB/device at 88Lx4k). Checkpointing both loop
+    # bodies caps attention-bwd residency at one tile.
+    @jax.checkpoint
+    def q_chunk_fn(qc, q0):
+        def kv_body(carry, ki):
+            # GQA without materializing repeated K/V: q is viewed as
+            # (B, qc, KV, rep, dh) and contracted against (B, kc, KV, dh)
+            # group-wise — a 12x memory saving at mistral's 96:8 ratio.
+            m, l, acc = carry
+            kc, vc, kpos = ki["k"], ki["v"], ki["pos"]  # (B, kc, KV, dh)
+            qg = qc.reshape(B, q_chunk, KV, rep, dh)
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kc,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = q0 + jnp.arange(q_chunk)
+                kpos_v = kpos * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos_v[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            s = s.reshape(B, Hq, q_chunk, kv_chunk)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pg = p.reshape(B, KV, rep, q_chunk, kv_chunk).astype(qc.dtype)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", pg, vc,
+                preferred_element_type=jnp.float32).reshape(
+                    B, Hq, q_chunk, dh)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hq, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hq, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hq, q_chunk, dh), jnp.float32)
+        ks = {"k": k.reshape(B, nk, kv_chunk, KV, dh).swapaxes(0, 1),
+              "v": v.reshape(B, nk, kv_chunk, KV, dh).swapaxes(0, 1),
+              "pos": jnp.arange(nk)}
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_body), (m0, l0, a0),
+                                      ks)
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return out.swapaxes(1, 2).astype(qc.dtype)  # (B, qc, Hq, dh)
+
+    def q_body(_, qi):
+        return None, q_chunk_fn(qi["q"], qi["pos"] * q_chunk)
+
+    qs = {"q": q.swapaxes(0, 1), "pos": jnp.arange(nq)}
+    _, out = jax.lax.scan(q_body, None, qs)
+    return out.swapaxes(0, 1).reshape(B, S, Hq, dh)
+
+
+def _flash_unrolled(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int):
+    """Straight-line flash attention (probe mode), same math as above."""
+    B, S, Hq, dh = q.shape
+    KV = k.shape[2]
+    rep = Hq // KV
+    scale = 1.0 / math.sqrt(dh)
+    nq, nk = S // q_chunk, S // kv_chunk
+    outs = []
+    for qi in range(nq):
+        qc = q[:, qi * q_chunk:(qi + 1) * q_chunk]
+        m = jnp.full((B, Hq, q_chunk), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, Hq, q_chunk), jnp.float32)
+        acc = jnp.zeros((B, Hq, q_chunk, dh), jnp.float32)
+        qg = qc.reshape(B, q_chunk, KV, rep, dh)
+        for ki in range(nk):
+            if causal and ki * kv_chunk > (qi + 1) * q_chunk - 1:
+                continue  # fully-masked tile: skip (causal block sparsity)
+            kc = k[:, ki * kv_chunk:(ki + 1) * kv_chunk]
+            vc = v[:, ki * kv_chunk:(ki + 1) * kv_chunk]
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kc,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                s = jnp.where(
+                    (qpos[:, None] >= kpos[None, :])[None, None, None],
+                    s, -1e30)
+            s = s.reshape(B, Hq, q_chunk, kv_chunk)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            pg = p.reshape(B, KV, rep, q_chunk, kv_chunk).astype(qc.dtype)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", pg, vc,
+                preferred_element_type=jnp.float32).reshape(
+                    B, Hq, q_chunk, dh)
+            m = m_new
+        outs.append((acc / jnp.maximum(l, 1e-20)[..., None]
+                     ).swapaxes(1, 2).astype(q.dtype))
+    return jnp.concatenate(outs, axis=1).reshape(B, S, Hq, dh)
+
+
+def moe_ffn(x, lp, cfg: LMConfig, mesh):
+    """Sort-based top-k MoE (x: (N, D) flat tokens) -> (N, D).
+
+    Expert weights are stored with E padded to the tensor-axis width; router
+    indices never reach the padded range, so padded experts process only
+    zeros (pure padding waste, visible and noted in the roofline)."""
+    mc = cfg.moe
+    E, K = mc.n_experts, mc.top_k
+    Ep = cfg.n_experts_padded
+    N, D = x.shape
+    C = int(mc.capacity_factor * N * K / E)
+    C = max(8, min(C, N))
+    x = constrain(x, mesh, ("pod", "data"), None)
+    logits = (x @ lp["router"]).astype(jnp.float32)       # (N, E)
+    logits = constrain(logits, mesh, ("pod", "data"), None)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)                  # (N, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    flat_e = eidx.reshape(-1)                              # (N*K,)
+    # stable sort by expert; rank within expert = position - expert start
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(N * K) - starts[sorted_e]
+    # gather-only dispatch (no scatter — GSPMD reshards gathers cleanly):
+    # tokens sorted by expert are contiguous, so expert e's batch is rows
+    # [starts[e], starts[e]+C) of the sorted token matrix, masked at count.
+    sorted_tok = constrain(x[order // K], mesh, ("pod", "data"), None)
+    starts_p = jnp.concatenate(
+        [starts, jnp.full((Ep - E,), N * K, jnp.int32)])   # padded experts
+    take = starts_p[:, None] + jnp.arange(C)[None, :]      # (Ep, C)
+    valid = (jnp.arange(C)[None, :] < jnp.minimum(
+        jnp.concatenate([counts, jnp.zeros(Ep - E, counts.dtype)]), C
+    )[:, None])
+    h = sorted_tok[jnp.clip(take, 0, N * K - 1)] * valid[..., None]
+    h = constrain(h, mesh, "model", None, None)            # (Ep, C, D)
+    a = jnp.einsum("ecd,edf->ecf", h, lp["moe_w_gate"])
+    b = jnp.einsum("ecd,edf->ecf", h, lp["moe_w_up"])
+    hh = jax.nn.silu(a) * b
+    out_e = jnp.einsum("ecf,efd->ecd", hh, lp["moe_w_down"])
+    out_e = constrain(out_e, mesh, "model", None, None)
+    flat_out = out_e.reshape(Ep * C, D)
+    # combine: token (n,k) sits at sorted position inv[nk] with expert rank
+    # rank[inv[nk]]; capacity-dropped tokens contribute zero.
+    inv = jnp.argsort(order, stable=True)                  # (N*K,)
+    r_tok = rank[inv]
+    e_tok = flat_e
+    kept = r_tok < C
+    src = jnp.clip(e_tok * C + jnp.minimum(r_tok, C - 1), 0, Ep * C - 1)
+    per_k = flat_out[src] * kept[:, None].astype(x.dtype)
+    per_k = constrain(per_k.reshape(N, K, D), mesh,
+                      ("pod", "data"), None, None)
+    return (per_k * gates[..., None].astype(x.dtype)).sum(1)
+
+
+def dense_ffn(x, lp):
+    return (jax.nn.silu(x @ lp["w_gate"]) * (x @ lp["w_up"])) @ lp["w_down"]
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+
+def _boundary_constraint(x, cfg: LMConfig, mesh):
+    """Layer-boundary activation sharding (what remat saves per layer).
+
+    "seq" = Megatron-style sequence parallelism: (B, S, D) shards S over
+    "model" between blocks, so the 88-layer remat footprint divides by the
+    tensor-axis width; GSPMD inserts the all-gathers at the attention/FFN
+    entry points.  "dmodel" shards D instead; "none" is the naive baseline
+    (kept for the §Perf before/after record).
+    """
+    if cfg.act_shard == "seq":
+        return constrain(x, mesh, ("pod", "data"), "model", None)
+    if cfg.act_shard == "dmodel":
+        return constrain(x, mesh, ("pod", "data"), None, "model")
+    return constrain(x, mesh, ("pod", "data"), None, None)
+
+
+def forward(params, tokens, cfg: LMConfig, mesh, return_kv: bool = False):
+    """tokens (B, S) -> final hidden (B, S, D) [+ per-layer KV cache]."""
+    B, S = tokens.shape
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    x = params["embed"][tokens]
+    x = _boundary_constraint(x, cfg, mesh)
+    positions = jnp.arange(S)[None, :]
+
+    def block(x, lp):
+        # Megatron-style sequence parallelism: the block-BOUNDARY tensor
+        # (what remat saves, 88x per device) stays seq-sharded over "model";
+        # inside the block the activation is all-gathered to full sequence so
+        # the tensor-parallel matmuls don't fight over the model axis
+        # (otherwise GSPMD reconciles by all-gathering entire FFN weights).
+        h = rmsnorm(x, lp["ln1"])
+        h = constrain(h, mesh, ("pod", "data"), None, None)
+        q = (h @ lp["wq"]).reshape(B, S, H, dh)
+        k = (h @ lp["wk"]).reshape(B, S, KV, dh)
+        v = (h @ lp["wv"]).reshape(B, S, KV, dh)
+        # activations batch-sharded through attention (head counts do not
+        # always divide the model axis; GSPMD pads intermediates as needed)
+        q = constrain(q, mesh, ("pod", "data"), None, "model", None)
+        k = constrain(k, mesh, ("pod", "data"), None, None, None)
+        v = constrain(v, mesh, ("pod", "data"), None, None, None)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        att = flash_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk,
+                              kv_chunk=cfg.kv_chunk,
+                              unroll=cfg.probe_unroll)
+        x = x + _boundary_constraint(
+            att.reshape(B, S, H * dh) @ lp["wo"], cfg, mesh)
+        h2 = rmsnorm(x, lp["ln2"])
+        h2 = constrain(h2, mesh, ("pod", "data"), None, None)
+        if cfg.moe:
+            y = moe_ffn(h2.reshape(B * S, D), lp, cfg, mesh).reshape(B, S, D)
+        else:
+            y = dense_ffn(h2, lp)
+        x = x + _boundary_constraint(y, cfg, mesh)
+        x = _boundary_constraint(x, cfg, mesh)
+        kv = ((k.reshape(B, S, KV * dh), v.reshape(B, S, KV * dh))
+              if return_kv else None)
+        return x, kv
+
+    if cfg.probe_layers is not None:
+        # probe mode: unrolled layers for exact HLO cost accounting
+        kvs = []
+        for i in range(cfg.probe_layers):
+            lp = jax.tree.map(lambda a: a[i % a.shape[0]], params["layers"])
+            x, kv = block(x, lp)
+            if return_kv:
+                kvs.append(kv)
+        out = rmsnorm(x, params["ln_f"])
+        if return_kv:
+            k_all = jnp.stack([kv[0] for kv in kvs])
+            v_all = jnp.stack([kv[1] for kv in kvs])
+            return out, {"k": k_all, "v": v_all}
+        return out
+
+    body = block
+    if cfg.remat and not return_kv:
+        body = jax.checkpoint(block, prevent_cse=False)
+
+    x, kvs = jax.lax.scan(body, x, params["layers"])
+    out = rmsnorm(x, params["ln_f"])
+    if return_kv:
+        return out, {"k": kvs[0], "v": kvs[1]}
+    return out
+
+
+def make_prefill_step(cfg: LMConfig, mesh):
+    """prefill_step(params, tokens) -> (last-token logits, KV cache)."""
+
+    def prefill_step(params, tokens):
+        hidden, cache = forward(params, tokens, cfg, mesh, return_kv=True)
+        logits = hidden[:, -1] @ params["out_proj"]
+        return logits, cache
+
+    return prefill_step
+
+
+def lm_loss(params, batch, cfg: LMConfig, mesh):
+    """Chunked vocab-sharded cross-entropy."""
+    hidden = forward(params, batch["tokens"], cfg, mesh)   # (B, S, D)
+    B, S, D = hidden.shape
+    ch = min(cfg.loss_chunk, S)
+    nch = S // ch
+
+    def chunk_loss(carry, i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * ch, ch, axis=1)
+        y = jax.lax.dynamic_slice_in_dim(batch["labels"], i * ch, ch, axis=1)
+        logits = h @ params["out_proj"]                    # (B, ch, Vp)
+        logits = constrain(logits, mesh, ("pod", "data"), None, "model")
+        if cfg.vocab_padded > cfg.vocab:                   # mask pad columns
+            vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+            logits = jnp.where(vmask, logits, -1e30)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), y[..., None], axis=-1)[..., 0]
+        return carry + (lse - gold).sum(), None
+
+    if cfg.probe_unroll:
+        tot = jnp.zeros((), jnp.float32)
+        for i in range(nch):
+            tot, _ = chunk_loss(tot, i)
+    else:
+        tot, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                              jnp.arange(nch))
+    return tot / (B * S)
+
+
+# --------------------------------------------------------------------------
+# train / serve steps
+# --------------------------------------------------------------------------
+
+
+def make_train_step(cfg: LMConfig, mesh, optimizer_update,
+                    param_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, loss).
+
+    Microbatching: the global batch is split into cfg.microbatch slices and
+    gradients accumulate in a scan (activation memory / microbatch).
+
+    ``param_shardings`` pins gradient shardings to the parameter layout —
+    without it GSPMD may pick a transposed layout for scan-xs cotangents and
+    then *all-gather entire weight matrices* to reconcile at the accumulate/
+    optimizer boundary (observed: 21 replicated f32[28672,12288] buffers on
+    mistral-123b).
+    """
+
+    def pin(g):
+        if param_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            param_shardings)
+
+    def loss_fn(p, b):
+        return lm_loss(p, b, cfg, mesh)
+
+    def train_step(params, opt_state, batch):
+        mb = cfg.microbatch
+        if mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = pin(grads)
+        else:
+            B = batch["tokens"].shape[0]
+            sz = B // mb
+            def mb_body(acc, i):
+                sl = {k: jax.lax.dynamic_slice_in_dim(v, i * sz, sz, 0)
+                      for k, v in batch.items()}
+                l, g = jax.value_and_grad(loss_fn)(params, sl)
+                g = pin(g)
+                # accumulate in the param dtype: with donated scan carries
+                # this halves accumulator residency vs f32; the optimizer
+                # upcasts to f32 before the moment update.
+                return (acc[0] + l / mb,
+                        jax.tree.map(lambda a, b: a + (b / mb).astype(a.dtype),
+                                     acc[1], g)), None
+            zero = (jnp.zeros((), jnp.float32),
+                    pin(jax.tree.map(jnp.zeros_like, params)))
+            (loss, grads), _ = jax.lax.scan(mb_body, zero, jnp.arange(mb))
+        new_params, new_opt, gnorm = optimizer_update(params, grads,
+                                                      opt_state)
+        return new_params, new_opt, loss, gnorm
+
+    return train_step
+
+
+def make_serve_step(cfg: LMConfig, mesh):
+    """Returns serve_step(params, cache, token, pos) -> (logits, cache).
+
+    cache: dict(k=(L, B, S, KV*dh), v=(L, B, S, KV*dh)) — one new token
+    attends to `pos` cached positions (decode_* / long_* shapes).
+    """
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    rep = H // KV
+
+    def serve_step(params, cache, token, pos):
+        B = token.shape[0]
+        x = params["embed"][token][:, None, :]             # (B, 1, D)
+        positions = jnp.full((B, 1), pos, jnp.int32)
+
+        def block(carry, inp):
+            x, li = carry
+            lp, kc, vc = inp
+
+            h = rmsnorm(x, lp["ln1"])
+            q = (h @ lp["wq"]).reshape(B, 1, H, dh)
+            k = (h @ lp["wk"]).reshape(B, 1, KV, dh)
+            v = (h @ lp["wv"]).reshape(B, 1, KV, dh)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            # append to cache at position `pos`
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.reshape(B, 1, KV * dh), pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.reshape(B, 1, KV * dh), pos, axis=1)
+            S = kc.shape[1]
+            kk = kc.reshape(B, S, KV, dh)
+            vv = vc.reshape(B, S, KV, dh)
+            # GQA decode without repeat: group the query heads (the repeat
+            # would materialize rep x the ENTIRE cache — 100+ GB at 32k)
+            qg = q.reshape(B, KV, rep, dh)
+            s = jnp.einsum("bgrd,bsgd->bgrs", qg, kk,
+                           preferred_element_type=jnp.float32)
+            s = s / math.sqrt(dh)
+            smask = jnp.arange(S)[None, None, None, :] <= pos
+            s = jnp.where(smask, s, -1e30)
+            p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+            att = jnp.einsum("bgrs,bsgd->bgrd", p, vv)
+            x = x + att.reshape(B, 1, H * dh) @ lp["wo"]
+            h2 = rmsnorm(x, lp["ln2"])
+            if cfg.moe:
+                y = moe_ffn(h2.reshape(B, D), lp, cfg, mesh).reshape(B, 1, D)
+            else:
+                y = dense_ffn(h2, lp)
+            return (x + y, li + 1), (kc, vc)
+
+        if cfg.probe_layers is not None:
+            nk, nv = [], []
+            for i in range(cfg.probe_layers):
+                li = i % cfg.n_layers
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                (x, _), (kc, vc) = block(
+                    (x, i), (lp, cache["k"][li], cache["v"][li]))
+                nk.append(kc)
+                nv.append(vc)
+            logits = rmsnorm(x, params["ln_f"]) @ params["out_proj"]
+            return logits[:, 0], {"k": jnp.stack(nk), "v": jnp.stack(nv)}
+        (x, _), (new_k, new_v) = jax.lax.scan(
+            block, (x, 0), (params["layers"], cache["k"], cache["v"]))
+        logits = rmsnorm(x, params["ln_f"]) @ params["out_proj"]
+        return logits[:, 0], {"k": new_k, "v": new_v}
+
+    return serve_step
+
+
+def make_cache_shape(cfg: LMConfig, batch: int, seq: int):
+    KVdh = cfg.n_kv_heads * cfg.d_head
+    sh = (cfg.n_layers, batch, seq, KVdh)
+    return {"k": jax.ShapeDtypeStruct(sh, cfg.dtype),
+            "v": jax.ShapeDtypeStruct(sh, cfg.dtype)}

@@ -1,0 +1,329 @@
+"""RecSys model family: DLRM, SASRec, DIN, two-tower retrieval.
+
+Common substrate: one *fused* embedding table per model — all categorical
+tables concatenate row-wise into a single (ΣR, D) array with per-field row
+offsets, looked up in ONE gather (the FBGEMM/TBE trick; also what makes
+row-sharding over the whole mesh trivial: P(("data","model"), None)).
+EmbeddingBag semantics (multi-hot history bags) come from
+repro.sparse.embedding_bag.
+
+  * DLRM  (arXiv:1906.00091) — bottom MLP -> dot interaction -> top MLP;
+  * SASRec (arXiv:1808.09781) — causal self-attention over the item history;
+  * DIN   (arXiv:1706.06978) — target attention (sigmoid-weighted sum);
+  * two-tower (Yi et al., RecSys'19) — dual MLP towers, in-batch sampled
+    softmax with logQ correction; retrieval_cand scoring is a single
+    (1, D)x(D, 10^6) matmul (kernels/retrieval_dot on TPU).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.sparse.ops import embedding_bag
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (i, o), dtype) * jnp.sqrt(2.0 / i),
+             "b": jnp.zeros((o,), dtype)}
+            for k, i, o in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, lp in enumerate(layers):
+        x = x @ lp["w"] + lp["b"]
+        if i + 1 < len(layers) or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logit, label):
+    logit = logit.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * label +
+                    jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ==========================================================================
+# DLRM
+# ==========================================================================
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    table_rows: Sequence[int] = ()
+    embed_dim: int = 128
+    n_dense: int = 13
+    bot_mlp: Sequence[int] = (512, 256, 128)
+    top_mlp: Sequence[int] = (1024, 1024, 512, 256, 1)
+    dtype: Any = jnp.float32
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.table_rows)[:-1]]).astype(
+            np.int64)
+
+    @property
+    def total_rows(self) -> int:
+        """Fused-table rows, padded to 512 for whole-mesh row sharding
+        (padding rows sit at the end and are never addressed)."""
+        n = int(sum(self.table_rows))
+        return (n + 511) // 512 * 512
+
+
+def dlrm_init(cfg: DLRMConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "table": jax.random.normal(
+            k1, (cfg.total_rows, cfg.embed_dim), cfg.dtype) * 0.01,
+        "bot": _mlp_init(k2, (cfg.n_dense, *cfg.bot_mlp), cfg.dtype),
+        "top": _mlp_init(
+            k3, (cfg.embed_dim + (len(cfg.table_rows) + 1) *
+                 len(cfg.table_rows) // 2 + 0, *cfg.top_mlp), cfg.dtype),
+    }
+
+
+def dlrm_forward(params, batch, cfg: DLRMConfig, mesh):
+    dense = _mlp_apply(params["bot"], batch["dense"], final_act=True)
+    ids = batch["sparse"] + jnp.asarray(cfg.offsets, jnp.int32)[None, :]
+    emb = params["table"][ids]                    # (B, 26, D) one fused gather
+    emb = constrain(emb, mesh, ("pod", "data", "model"), None, None)
+    feats = jnp.concatenate([dense[:, None, :], emb], axis=1)  # (B, 27, D)
+    inter = jnp.einsum("bnd,bmd->bnm", feats, feats)
+    n = feats.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    pairs = inter[:, iu, ju]                                   # (B, 351)
+    top_in = jnp.concatenate([dense, pairs], axis=1)
+    return _mlp_apply(params["top"], top_in)[:, 0]
+
+
+def dlrm_loss(params, batch, cfg: DLRMConfig, mesh):
+    return bce_loss(dlrm_forward(params, batch, cfg, mesh), batch["label"])
+
+
+# ==========================================================================
+# SASRec
+# ==========================================================================
+
+
+@dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    dtype: Any = jnp.float32
+
+
+def sasrec_init(cfg: SASRecConfig, key) -> dict:
+    ks = jax.random.split(key, 3 + 4 * cfg.n_blocks)
+    D = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        b = 3 + 4 * i
+        blocks.append({
+            "wqkv": jax.random.normal(ks[b], (D, 3 * D), cfg.dtype) * 0.05,
+            "wo": jax.random.normal(ks[b + 1], (D, D), cfg.dtype) * 0.05,
+            "ff1": jax.random.normal(ks[b + 2], (D, D), cfg.dtype) * 0.05,
+            "ff2": jax.random.normal(ks[b + 3], (D, D), cfg.dtype) * 0.05,
+            "ln1": jnp.ones((D,), cfg.dtype), "ln2": jnp.ones((D,), cfg.dtype),
+        })
+    return {
+        "item_embed": jax.random.normal(
+            ks[0], (cfg.n_items, D), cfg.dtype) * 0.01,
+        "pos_embed": jax.random.normal(
+            ks[1], (cfg.seq_len, D), cfg.dtype) * 0.01,
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+        if cfg.n_blocks > 1 else jax.tree.map(lambda x: x[None], blocks[0]),
+    }
+
+
+def _ln(x, g, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g
+
+
+def sasrec_hidden(params, seq_ids, cfg: SASRecConfig, mesh):
+    B, S = seq_ids.shape
+    D = cfg.embed_dim
+    x = params["item_embed"][seq_ids] + params["pos_embed"][None, :S]
+    x = constrain(x, mesh, ("pod", "data", "model"), None, None)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+
+    def block(x, bp):
+        h = _ln(x, bp["ln1"])
+        qkv = h @ bp["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(D)
+        s = jnp.where(mask[None], s, -1e30)
+        att = jax.nn.softmax(s, -1) @ v
+        x = x + att @ bp["wo"]
+        h2 = _ln(x, bp["ln2"])
+        return x + jax.nn.relu(h2 @ bp["ff1"]) @ bp["ff2"]
+
+    # unrolled (n_blocks == 2): exact HLO cost accounting for roofline
+    for i in range(cfg.n_blocks):
+        bp = jax.tree.map(lambda a: a[i], params["blocks"])
+        x = block(x, bp)
+    return x                                            # (B, S, D)
+
+
+def sasrec_loss(params, batch, cfg: SASRecConfig, mesh):
+    """BCE over (positive, sampled negative) next items, per position."""
+    h = sasrec_hidden(params, batch["seq"], cfg, mesh)
+    pos_e = params["item_embed"][batch["pos"]]          # (B, S, D)
+    neg_e = params["item_embed"][batch["neg"]]
+    pos_l = jnp.sum(h * pos_e, -1)
+    neg_l = jnp.sum(h * neg_e, -1)
+    m = batch["seq_mask"]
+    loss = (bce_pointwise(pos_l, 1.0) + bce_pointwise(neg_l, 0.0)) * m
+    return loss.sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def bce_pointwise(logit, label):
+    logit = logit.astype(jnp.float32)
+    return (jnp.maximum(logit, 0) - logit * label +
+            jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def sasrec_serve(params, batch, cfg: SASRecConfig, mesh):
+    """Score candidate items given a user's history (online inference)."""
+    h = sasrec_hidden(params, batch["seq"], cfg, mesh)[:, -1]  # (B, D)
+    cand = params["item_embed"][batch["cands"]]                # (B, C, D)
+    return jnp.einsum("bd,bcd->bc", h, cand)
+
+
+# ==========================================================================
+# DIN
+# ==========================================================================
+
+
+@dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    n_items: int = 1_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Sequence[int] = (80, 40)
+    mlp: Sequence[int] = (200, 80)
+    dtype: Any = jnp.float32
+
+
+def din_init(cfg: DINConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    D = cfg.embed_dim
+    return {
+        "item_embed": jax.random.normal(
+            k1, (cfg.n_items, D), cfg.dtype) * 0.01,
+        "attn": _mlp_init(k2, (4 * D, *cfg.attn_mlp, 1), cfg.dtype),
+        "mlp": _mlp_init(k3, (2 * D, *cfg.mlp, 1), cfg.dtype),
+    }
+
+
+def din_forward(params, batch, cfg: DINConfig, mesh):
+    hist = params["item_embed"][batch["history"]]       # (B, L, D)
+    hist = constrain(hist, mesh, ("pod", "data", "model"), None, None)
+    tgt = params["item_embed"][batch["target"]]         # (B, D)
+    t = jnp.broadcast_to(tgt[:, None, :], hist.shape)
+    a_in = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+    w = _mlp_apply(params["attn"], a_in)[..., 0]        # (B, L) — sigmoid gate
+    w = jax.nn.sigmoid(w) * batch["hist_mask"]
+    user = jnp.einsum("bl,bld->bd", w, hist)            # weighted sum pool
+    x = jnp.concatenate([user, tgt], axis=-1)
+    return _mlp_apply(params["mlp"], x)[:, 0]
+
+
+def din_loss(params, batch, cfg: DINConfig, mesh):
+    return bce_loss(din_forward(params, batch, cfg, mesh), batch["label"])
+
+
+# ==========================================================================
+# two-tower retrieval
+# ==========================================================================
+
+
+@dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    n_users_vocab: int = 2_000_000
+    n_items: int = 2_000_000
+    embed_dim: int = 256
+    tower_mlp: Sequence[int] = (1024, 512, 256)
+    n_user_feats: int = 8
+    dtype: Any = jnp.float32
+
+
+def twotower_init(cfg: TwoTowerConfig, key) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    D = cfg.embed_dim
+    return {
+        "user_table": jax.random.normal(
+            k1, (cfg.n_users_vocab, D), cfg.dtype) * 0.01,
+        "item_table": jax.random.normal(
+            k2, (cfg.n_items, D), cfg.dtype) * 0.01,
+        "user_tower": _mlp_init(k3, (D, *cfg.tower_mlp), cfg.dtype),
+        "item_tower": _mlp_init(k4, (D, *cfg.tower_mlp), cfg.dtype),
+    }
+
+
+def user_embedding(params, batch, cfg: TwoTowerConfig, mesh):
+    bag = embedding_bag(params["user_table"], batch["user_feats"],
+                        weights=batch["user_mask"], mode="sum")
+    u = _mlp_apply(params["user_tower"], bag)
+    return u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-6)
+
+
+def item_embedding(params, item_ids, cfg: TwoTowerConfig, mesh):
+    it = params["item_table"][item_ids]
+    v = _mlp_apply(params["item_tower"], it)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_loss(params, batch, cfg: TwoTowerConfig, mesh, tau=0.05):
+    """In-batch sampled softmax with logQ correction (Yi et al. '19)."""
+    u = user_embedding(params, batch, cfg, mesh)         # (B, D')
+    v = item_embedding(params, batch["item"], cfg, mesh)  # (B, D')
+    logits = (u @ v.T) / tau                             # (B, B)
+    logits = logits - batch["logq"][None, :]             # sampling correction
+    labels = jnp.arange(u.shape[0])
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), -1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[:, None], -1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def twotower_serve(params, batch, cfg: TwoTowerConfig, mesh):
+    """Online inference: score given (user, item) pairs."""
+    u = user_embedding(params, batch, cfg, mesh)         # (B, D')
+    v = item_embedding(params, batch["item"], cfg, mesh)  # (B, D')
+    return jnp.sum(u * v, axis=-1)
+
+
+def twotower_retrieve(params, batch, cfg: TwoTowerConfig, mesh):
+    """retrieval_cand: score one query against n_candidates items."""
+    u = user_embedding(params, batch, cfg, mesh)         # (1, D')
+    cand = item_embedding(params, batch["cand_ids"], cfg, mesh)  # (C, D')
+    cand = constrain(cand, mesh, ("data", "model"), None)
+    return (u @ cand.T)                                  # (1, C)
+
+
+# ==========================================================================
+# generic step factories
+# ==========================================================================
+
+
+def make_train_step(loss_fn, optimizer_update):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_p, new_o, gnorm = optimizer_update(params, grads, opt_state)
+        return new_p, new_o, loss, gnorm
+    return train_step

@@ -1,0 +1,90 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+AdamW with decoupled weight decay and global-norm clipping; row-wise Adagrad
+for huge embedding tables (the recsys standard — state is one scalar per row,
+1/D the memory of Adam).  All states are plain pytrees so pjit shards them
+with the same rules as the parameters (ZeRO-3-style when params are sharded
+on the data axis).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> AdamWState:
+    """``state_dtype=bfloat16`` halves moment memory (PaLM-style) — the
+    update still runs in f32 (moments are upcast per step)."""
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=state_dtype),
+                         params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, max_grad_norm: float = 1.0):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        sdt = m.dtype
+        g = g.astype(jnp.float32)
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+            p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(sdt), v.astype(sdt))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), gnorm
+
+
+class RowAdagradState(NamedTuple):
+    accum: jnp.ndarray  # (rows,) one scalar per embedding row
+
+
+def row_adagrad_init(table: jnp.ndarray) -> RowAdagradState:
+    return RowAdagradState(accum=jnp.zeros(table.shape[0], jnp.float32))
+
+
+def row_adagrad_update(table, grad, state: RowAdagradState, lr: float = 0.01,
+                       eps: float = 1e-8):
+    """Row-wise Adagrad: accumulate mean-square per row (dense grad form)."""
+    g2 = jnp.mean(jnp.square(grad.astype(jnp.float32)), axis=-1)
+    accum = state.accum + g2
+    scale = lr / (jnp.sqrt(accum) + eps)
+    new = table.astype(jnp.float32) - scale[:, None] * grad.astype(jnp.float32)
+    return new.astype(table.dtype), RowAdagradState(accum=accum)

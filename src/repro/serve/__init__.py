@@ -1,0 +1,1 @@
+from .kv_cache import PagedKVCache, triangle_page_schedule  # noqa: F401

@@ -1,0 +1,88 @@
+"""Sparse/ragged primitives JAX does not ship natively.
+
+JAX has no EmbeddingBag and no CSR/CSC sparse (BCOO only), so message
+passing and recsys lookups are built from gather + segment reductions —
+these ARE part of the system, per the assignment brief.  Everything here is
+jit/grad-compatible and shard_map-friendly (no data-dependent shapes; all
+ragged structure is carried by explicit segment-id / mask arrays).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_max(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                 num_segments: int) -> jnp.ndarray:
+    tot = segment_sum(data, segment_ids, num_segments)
+    cnt = segment_sum(jnp.ones_like(segment_ids, dtype=data.dtype),
+                      segment_ids, num_segments)
+    return tot / jnp.maximum(cnt, 1)[..., None] if data.ndim > 1 else (
+        tot / jnp.maximum(cnt, 1))
+
+
+def segment_softmax(logits: jnp.ndarray, segment_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """Numerically-stable softmax within each segment (GAT edge-softmax)."""
+    seg_max = jax.ops.segment_max(logits, segment_ids,
+                                  num_segments=num_segments)
+    ex = jnp.exp(logits - seg_max[segment_ids])
+    den = segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(den[segment_ids], 1e-20)
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  offsets: jnp.ndarray | None = None,
+                  weights: jnp.ndarray | None = None,
+                  mode: str = "sum") -> jnp.ndarray:
+    """torch.nn.EmbeddingBag equivalent: gather rows then reduce per bag.
+
+    Two calling conventions:
+      * ``ids`` (B, L) fixed-size bags (use ``weights`` (B, L) as mask for
+        ragged bags) -> (B, D);
+      * ``ids`` (M,) flat with ``offsets`` (B,) bag starts -> (B, D).
+    """
+    if offsets is None:
+        rows = table[ids]                        # (B, L, D)
+        if weights is not None:
+            rows = rows * weights[..., None]
+        if mode == "sum":
+            return rows.sum(axis=-2)
+        if mode == "mean":
+            if weights is None:
+                return rows.mean(axis=-2)
+            den = jnp.maximum(weights.sum(axis=-1, keepdims=True), 1e-9)
+            return rows.sum(axis=-2) / den
+        if mode == "max":
+            return rows.max(axis=-2)
+        raise ValueError(mode)
+    # flat + offsets form: bag id per element via searchsorted
+    m = ids.shape[0]
+    bag = jnp.searchsorted(offsets, jnp.arange(m), side="right") - 1
+    rows = table[ids]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, bag, num_segments=offsets.shape[0])
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones((m,), table.dtype), bag,
+                                  num_segments=offsets.shape[0])
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    return out
+
+
+def coalesce_edges(src: jnp.ndarray, dst: jnp.ndarray, n: int):
+    """Sort edges by destination for locality (static shape, jit-safe)."""
+    key = dst.astype(jnp.int64) * n + src
+    order = jnp.argsort(key)
+    return src[order], dst[order], order

@@ -1,0 +1,24 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real device; only launch/dryrun.py forces 512 fake devices."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def zipf_docs():
+    """A small Zipfian document collection shared across test modules."""
+    rng = np.random.default_rng(1234)
+    vocab = [f"w{i}" for i in range(400)]
+    probs = 1.0 / np.arange(1, 401) ** 1.07
+    probs /= probs.sum()
+    docs = [[vocab[i] for i in rng.choice(400, size=rng.integers(8, 150),
+                                          p=probs)]
+            for _ in range(500)]
+    return vocab, docs
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    import jax
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,122 @@
+"""BlockStore / DynamicIndex ingest+decode tests (Figure 3, Algorithm 1)."""
+
+from collections import Counter, defaultdict
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.index import DynamicIndex
+
+
+@pytest.mark.parametrize("growth", ["const", "expon", "triangle"])
+@pytest.mark.parametrize("B", [40, 64])
+def test_doc_level_equals_bruteforce(zipf_docs, growth, B):
+    vocab, docs = zipf_docs
+    idx = DynamicIndex(B=B, growth=growth)
+    truth = defaultdict(list)
+    for d, doc in enumerate(docs[:300], start=1):
+        idx.add_document(doc)
+        for t, f in Counter(doc).items():
+            truth[t].append((d, f))
+    for t, plist in truth.items():
+        docids, fs = idx.postings(t)
+        assert docids.tolist() == [p[0] for p in plist]
+        assert fs.tolist() == [p[1] for p in plist]
+        assert idx.ft(t) == len(plist)
+
+
+@pytest.mark.parametrize("growth", ["const", "triangle"])
+def test_word_level_positions(zipf_docs, growth):
+    vocab, docs = zipf_docs
+    idx = DynamicIndex(B=64, growth=growth, word_level=True)
+    truth = defaultdict(list)
+    for d, doc in enumerate(docs[:150], start=1):
+        idx.add_document(doc)
+        for w, t in enumerate(doc, start=1):
+            truth[t].append((d, w))
+    for t, plist in truth.items():
+        docids, wgaps = idx.postings(t)
+        got, last = [], {}
+        for dd, wg in zip(docids, wgaps):
+            w = last.get(int(dd), 0) + int(wg)
+            last[int(dd)] = w
+            got.append((int(dd), w))
+        assert got == plist
+
+
+def test_immediate_access(zipf_docs):
+    """The defining property: a document is findable the moment add returns."""
+    vocab, docs = zipf_docs
+    idx = DynamicIndex(B=48)
+    for d, doc in enumerate(docs[:100], start=1):
+        idx.add_document(doc)
+        t = doc[0]
+        docids, _ = idx.postings(t)
+        assert docids[-1] == d
+
+
+def test_breakdown_components_sum(zipf_docs):
+    vocab, docs = zipf_docs
+    idx = DynamicIndex(B=64)
+    for doc in docs[:200]:
+        idx.add_document(doc)
+    bd = idx.breakdown()
+    parts = sum(v for k, v in bd.items()
+                if k.startswith(("head_", "full_", "tail_"))
+                and not k.endswith("blocks"))
+    assert parts + bd["hash_bytes"] == bd["total_bytes"]
+    # Table 7 structure: full-block postings dominate at scale
+    assert bd["full_postings"] > 0 and bd["head_vocab"] > 0
+
+
+def test_bytes_per_posting_in_paper_band(zipf_docs):
+    """Table 8: doc-level whole-index cost ~1.9-2.6 B/posting (small
+    collections sit at the high end from vocab amortization)."""
+    vocab, docs = zipf_docs
+    idx = DynamicIndex(B=48)
+    for doc in docs:
+        idx.add_document(doc)
+    assert 1.5 < idx.bytes_per_posting() < 3.0
+
+
+def test_hash_probe_equals_cache(zipf_docs):
+    vocab, docs = zipf_docs
+    idx = DynamicIndex(B=64)
+    for doc in docs[:100]:
+        idx.add_document(doc)
+    for t in vocab[:200]:
+        tb = t.encode()
+        via_probe, _ = idx._probe(tb)
+        assert via_probe == idx._cache.get(tb)
+
+
+@given(st.lists(st.lists(st.integers(0, 60), min_size=1, max_size=40),
+                min_size=1, max_size=60),
+       st.sampled_from(["const", "expon", "triangle"]),
+       st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_random_streams_property(docs_ids, growth, word_level):
+    """Hypothesis: arbitrary doc streams roundtrip for every policy."""
+    idx = DynamicIndex(B=40, growth=growth, word_level=word_level)
+    truth = defaultdict(list)
+    for d, doc in enumerate(docs_ids, start=1):
+        terms = [f"t{i}" for i in doc]
+        idx.add_document(terms)
+        if word_level:
+            for w, t in enumerate(terms, start=1):
+                truth[t].append((d, w))
+        else:
+            for t, f in Counter(terms).items():
+                truth[t].append((d, f))
+    for t, plist in truth.items():
+        docids, second = idx.postings(t)
+        if word_level:
+            got, last = [], {}
+            for dd, wg in zip(docids, second):
+                w = last.get(int(dd), 0) + int(wg)
+                last[int(dd)] = w
+                got.append((int(dd), w))
+            assert got == plist
+        else:
+            assert list(zip(docids.tolist(), second.tolist())) == plist

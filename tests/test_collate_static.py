@@ -1,0 +1,70 @@
+"""Collation (§5.5) and static conversion (§3.1 / Table 9) tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.collate import collate, is_collated
+from repro.core.index import DynamicIndex
+from repro.core.static_index import StaticIndex
+
+
+@pytest.fixture(scope="module")
+def idx(zipf_docs):
+    vocab, docs = zipf_docs
+    idx = DynamicIndex(B=48, growth="const")
+    for doc in docs:
+        idx.add_document(doc)
+    return idx
+
+
+def test_collation_preserves_everything(idx, zipf_docs):
+    vocab, _ = zipf_docs
+    col = collate(idx)
+    assert is_collated(col)
+    assert not is_collated(idx)
+    assert col.total_bytes() == idx.total_bytes()
+    assert col.num_postings == idx.num_postings
+    for t in vocab[:150]:
+        d1, f1 = idx.postings(t)
+        d2, f2 = col.postings(t)
+        assert d1.tolist() == d2.tolist() and f1.tolist() == f2.tolist()
+
+
+def test_collated_index_remains_extensible(idx, zipf_docs):
+    """§5.5: "the index remains both queryable and extensible"."""
+    vocab, docs = zipf_docs
+    col = collate(idx)
+    n0 = col.num_docs
+    col.add_document(docs[0])
+    docids, _ = col.postings(docs[0][0])
+    assert docids[-1] == n0 + 1
+
+
+def test_collation_query_equivalence(idx, zipf_docs):
+    vocab, _ = zipf_docs
+    col = collate(idx)
+    rng = np.random.default_rng(5)
+    for _ in range(30):
+        terms = [vocab[i] for i in
+                 rng.choice(80, size=rng.integers(1, 4), replace=False)]
+        assert Q.conjunctive_query(idx, terms).tolist() == \
+            Q.conjunctive_query(col, terms).tolist()
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_static_freeze_roundtrip(idx, zipf_docs, codec):
+    vocab, _ = zipf_docs
+    st = StaticIndex.freeze(idx, codec)
+    for t in vocab[:150]:
+        d1, f1 = idx.postings(t)
+        d2, f2 = st.postings(t)
+        assert d1.tolist() == d2.tolist() and f1.tolist() == f2.tolist()
+
+
+def test_static_smaller_than_dynamic(idx):
+    """Table 9 vs Table 8: static < dynamic, interp < bp128."""
+    bp = StaticIndex.freeze(idx, "bp128")
+    it = StaticIndex.freeze(idx, "interp")
+    assert it.bytes_per_posting() < bp.bytes_per_posting()
+    assert bp.bytes_per_posting() < idx.bytes_per_posting()

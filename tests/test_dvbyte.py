@@ -1,0 +1,102 @@
+"""Codec unit + property tests (paper §2.2, §3.4, Algorithm 2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dvbyte as dv
+
+
+class TestVByte:
+    def test_paper_example_12345(self):
+        # "the decimal number 12,345 ... spans two seven-bit segments"
+        assert dv.vbyte_len(12345) == 2
+
+    def test_null_sentinel_property(self):
+        # §2.2: a null byte can only be the code of x == 0
+        assert dv.vbyte_encode([0]) == b"\x00"
+        for x in [1, 127, 128, 129, 2**14, 2**14 + 1, 2**21, 2**28 - 1]:
+            assert 0 not in dv.vbyte_encode([x]), x
+
+    def test_lengths(self):
+        for x, n in [(0, 1), (127, 1), (128, 2), (16383, 2), (16384, 3),
+                     (2**21 - 1, 3), (2**21, 4), (2**28 - 1, 4), (2**28, 5)]:
+            assert dv.vbyte_len(x) == n
+
+    @given(st.lists(st.integers(min_value=0, max_value=2**32 - 1),
+                    max_size=200))
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_property(self, values):
+        enc = dv.vbyte_encode(values)
+        dec = list(dv.vbyte_decode_stream(enc, sentinel=False))
+        assert dec == values
+
+    @given(st.lists(st.integers(min_value=0, max_value=2**32 - 1),
+                    min_size=1, max_size=200))
+    @settings(max_examples=30, deadline=None)
+    def test_vectorized_matches_scalar(self, values):
+        assert bytes(dv.vbyte_encode_array(np.asarray(values))) == \
+            dv.vbyte_encode(values)
+        out = dv.vbyte_decode_array(dv.vbyte_encode_array(np.asarray(values)))
+        assert out.tolist() == values
+
+
+class TestDoubleVByte:
+    def test_paper_examples(self):
+        # §3.4: F=4, g=10, f=3 -> g'=39, one byte
+        assert dv.dvbyte_len(10, 3, 4) == 1
+        # g=40, f=3 -> g'=159, two bytes
+        assert dv.dvbyte_len(40, 3, 4) == 2
+        # g=40, f=5 -> escape: 160 (2B) + f-F+1=2 (1B) = 3 bytes
+        assert dv.dvbyte_len(40, 5, 4) == 3
+
+    @given(st.integers(1, 2**28), st.integers(1, 10_000),
+           st.sampled_from([1, 2, 3, 4, 8, 16]))
+    @settings(max_examples=200, deadline=None)
+    def test_roundtrip_property(self, g, f, F):
+        buf = bytearray(16)
+        end = dv.dvbyte_encode_into(buf, 0, g, f, F)
+        (g2, f2), pos = dv.dvbyte_decode_from(buf, 0, F)
+        assert (g2, f2) == (g, f) and pos == end
+
+    @given(st.lists(st.tuples(st.integers(1, 2**20), st.integers(1, 500)),
+                    min_size=1, max_size=300),
+           st.sampled_from([2, 3, 4, 8]))
+    @settings(max_examples=30, deadline=None)
+    def test_stream_roundtrip_and_scalar_identity(self, pairs, F):
+        g = np.asarray([p[0] for p in pairs], np.uint64)
+        f = np.asarray([p[1] for p in pairs], np.uint64)
+        enc = dv.dvbyte_encode_pairs(g, f, F)
+        g2, f2 = dv.dvbyte_decode_pairs(enc, F)
+        assert (g2 == g).all() and (f2 == f).all()
+        buf = bytearray(len(pairs) * 16)
+        pos = 0
+        for gg, ff in pairs:
+            pos = dv.dvbyte_encode_into(buf, pos, gg, ff, F)
+        assert bytes(buf[:pos]) == bytes(enc)
+
+    def test_no_null_bytes_when_positive(self):
+        # the sentinel survives folding: any (g>=1, f>=1) code is null-free
+        rng = np.random.default_rng(0)
+        for F in (2, 3, 4, 8):
+            g = rng.integers(1, 1 << 20, 2000).astype(np.uint64)
+            f = rng.integers(1, 600, 2000).astype(np.uint64)
+            assert 0 not in dv.dvbyte_encode_pairs(g, f, F)
+
+    def test_f1_degenerates_to_vbyte(self):
+        # Table 3: "When F = 1 the original VByte scheme results"
+        g, f = np.asarray([5, 300, 7]), np.asarray([2, 1, 90])
+        enc = dv.dvbyte_encode_pairs(g, f, 1)
+        # F=1: always escape path -> vbyte(g*1) + vbyte(f - 1 + 1)
+        expect = dv.vbyte_encode([5, 2, 300, 1, 7, 90])
+        assert bytes(enc) == expect
+
+    def test_compression_wins_on_zipf(self):
+        """Table 3's shape: F=4 should beat F=1 by ~1/3 on Zipfian data."""
+        rng = np.random.default_rng(42)
+        g = rng.zipf(1.3, 50_000).astype(np.uint64)
+        f = np.minimum(rng.zipf(1.8, 50_000), 1000).astype(np.uint64)
+        sizes = {F: len(dv.dvbyte_encode_pairs(g, f, F))
+                 for F in (1, 2, 4, 8)}
+        assert sizes[4] < sizes[2] < sizes[1]
+        assert sizes[4] / sizes[1] < 0.75

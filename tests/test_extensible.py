@@ -1,0 +1,57 @@
+"""Growth-policy tests (paper §2.5, §5.3, §5.4)."""
+
+import numpy as np
+import pytest
+
+from repro.core.extensible import Const, Expon, Triangle, overhead_model
+
+
+def test_expon_matches_paper_sequence():
+    # §5.3: B=16, h=4, k=1.5 -> <16,16,16,32,48,64,96,144,208,...>
+    assert Expon(B=16, k=1.5).schedule(4)[:9] == \
+        (16, 16, 16, 32, 48, 64, 96, 144, 208)
+
+
+def test_triangle_matches_paper_sequence():
+    # §5.4: B=16, h=4 -> <16,16,32,32,32,48,48,48,48,...>
+    assert Triangle(B=16).schedule(4)[:9] == \
+        (16, 16, 32, 32, 32, 48, 48, 48, 48)
+
+
+def test_triangle_payload_sequence():
+    # §5.4: payload capacities <12,12,28,28,28,44,44,44,44,...>
+    sizes = Triangle(B=16).schedule(4)[:9]
+    assert tuple(s - 4 for s in sizes) == \
+        (12, 12, 28, 28, 28, 44, 44, 44, 44)
+
+
+def test_const_is_const():
+    assert set(Const(B=64).schedule(4)[:50]) == {64}
+
+
+def test_block_size_capped():
+    sizes = Triangle(B=64).schedule(4)
+    assert max(sizes) <= 1 << 16  # §5.4: "capped at 2^16 bytes"
+
+
+@pytest.mark.parametrize("n", [10_000, 100_000, 1_000_000])
+def test_triangle_overhead_sublinear(n):
+    """The paper's central asymptotic claim (§6): Triangle overhead is
+    Θ(sqrt(n)) while Const and Expon are Θ(n)."""
+    tri = overhead_model(Triangle(B=64), n, 4)
+    con = overhead_model(Const(B=64), n, 4)
+    exp = overhead_model(Expon(B=64, k=1.1), n, 4)
+    # Triangle beats both at scale
+    assert tri["overhead"] < con["overhead"]
+    assert tri["overhead"] < exp["overhead"]
+    # and is within a constant of 2*sqrt(2*h*n) (links+slack balanced)
+    assert tri["overhead"] < 8 * np.sqrt(2 * 4 * n)
+
+
+def test_triangle_ratio_shrinks():
+    r = [overhead_model(Triangle(B=64), n, 4)["ratio"]
+         for n in (10**3, 10**4, 10**5, 10**6)]
+    assert r[0] > r[1] > r[2] > r[3]
+    con = [overhead_model(Const(B=64), n, 4)["ratio"]
+           for n in (10**4, 10**6)]
+    assert abs(con[0] - con[1]) < 0.02  # Const ratio is ~constant

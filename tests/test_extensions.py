@@ -1,0 +1,158 @@
+"""Beyond-paper extensions: BM25 (paper §6.2 future work), phrase/proximity
+querying over the word-level index (§1.1's motivation), remesh, and the
+conjunctive sharded mode."""
+
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.index import DynamicIndex
+
+
+@pytest.fixture(scope="module")
+def word_index():
+    docs = [
+        "the quick brown fox jumps over the lazy dog".split(),
+        "a quick brown cat sits on the quick mat".split(),
+        "brown fox quick brown fox".split(),
+        "the dog sleeps all day long every day".split(),
+        "quick thinking saves the slow fox".split(),
+    ]
+    idx = DynamicIndex(B=48, word_level=True)
+    for d in docs:
+        idx.add_document(d)
+    return idx, docs
+
+
+class TestPhrase:
+    def test_phrase_hits(self, word_index):
+        idx, docs = word_index
+        got = Q.phrase_query(idx, ["quick", "brown"]).tolist()
+        exp = [i + 1 for i, d in enumerate(docs)
+               if any(d[j:j + 2] == ["quick", "brown"]
+                      for j in range(len(d) - 1))]
+        assert got == exp
+
+    def test_phrase_three_terms(self, word_index):
+        idx, docs = word_index
+        got = Q.phrase_query(idx, ["quick", "brown", "fox"]).tolist()
+        assert got == [1, 3]
+
+    def test_phrase_no_match(self, word_index):
+        idx, _ = word_index
+        assert len(Q.phrase_query(idx, ["lazy", "fox"])) == 0
+
+    def test_phrase_needs_word_level(self):
+        idx = DynamicIndex(B=48)
+        idx.add_document(["a", "b"])
+        with pytest.raises(ValueError):
+            Q.phrase_query(idx, ["a", "b"])
+
+    def test_proximity(self, word_index):
+        idx, docs = word_index
+        # "fox" and "dog" within 3 words: doc 1 only ("fox jumps over the
+        # lazy dog" — distance 5 > 3? positions: fox=4, dog=9 -> no)
+        got = Q.proximity_query(idx, ["fox", "dog"], window=5).tolist()
+        exp = []
+        for i, d in enumerate(docs):
+            pf = [j for j, t in enumerate(d) if t == "fox"]
+            pd = [j for j, t in enumerate(d) if t == "dog"]
+            if pf and pd and min(abs(a - b) for a in pf for b in pd) <= 5:
+                exp.append(i + 1)
+        assert got == exp
+
+    def test_phrase_brute_force_random(self):
+        rng = np.random.default_rng(0)
+        vocab = [f"t{i}" for i in range(30)]
+        docs = [[vocab[i] for i in rng.integers(0, 30, rng.integers(5, 40))]
+                for _ in range(60)]
+        idx = DynamicIndex(B=48, word_level=True)
+        for d in docs:
+            idx.add_document(d)
+        for _ in range(25):
+            a, b = vocab[rng.integers(30)], vocab[rng.integers(30)]
+            got = Q.phrase_query(idx, [a, b]).tolist()
+            exp = [i + 1 for i, d in enumerate(docs)
+                   if any(d[j] == a and d[j + 1] == b
+                          for j in range(len(d) - 1))]
+            assert got == exp, (a, b)
+
+
+class TestBM25:
+    def test_bm25_ranks_sensibly(self, zipf_docs):
+        vocab, docs = zipf_docs
+        idx = DynamicIndex(B=64)
+        doclens = [0]
+        for d in docs[:300]:
+            idx.add_document(d)
+            doclens.append(len(d))
+        dl = np.asarray(doclens, dtype=np.float64)
+        t = vocab[40]
+        top_d, top_s = Q.ranked_bm25(idx, [t], dl, k=10)
+        assert len(top_d) > 0
+        assert (np.diff(top_s) <= 1e-12).all()  # descending
+        # every returned doc actually contains the term
+        docs_with_t, _ = idx.postings(t)
+        assert set(top_d.tolist()) <= set(docs_with_t.tolist())
+
+    def test_bm25_prefers_higher_tf_same_length(self):
+        idx = DynamicIndex(B=48)
+        idx.add_document(["x", "x", "x", "pad", "pad", "pad"])
+        idx.add_document(["x", "pad", "pad", "pad", "pad", "pad"])
+        dl = np.asarray([0, 6, 6], dtype=np.float64)
+        top_d, top_s = Q.ranked_bm25(idx, ["x"], dl, k=2)
+        assert top_d[0] == 1 and top_s[0] > top_s[1]
+
+    def test_bm25_length_normalization(self):
+        idx = DynamicIndex(B=48)
+        idx.add_document(["x"] + ["pad"] * 3)       # tf=1, len 4
+        idx.add_document(["x"] + ["filler"] * 99)   # tf=1, len 100
+        dl = np.asarray([0, 4, 100], dtype=np.float64)
+        top_d, top_s = Q.ranked_bm25(idx, ["x"], dl, k=2)
+        assert top_d[0] == 1  # shorter doc wins at equal tf
+
+
+class TestDeviceBM25:
+    def test_device_bm25_matches_host(self, zipf_docs):
+        import jax.numpy as jnp
+
+        from repro.core.collate import collate
+        from repro.core.device_index import build_device_image, query_step
+        vocab, docs = zipf_docs
+        idx = DynamicIndex(B=64)
+        doclens = [0]
+        for d in docs[:250]:
+            idx.add_document(d)
+            doclens.append(len(d))
+        img = build_device_image(collate(idx), [t.encode() for t in vocab])
+        dl = np.zeros(idx.num_docs + 1, np.float32)
+        dl[: len(doclens)] = doclens
+        mb = int(img.term_nblk.max())
+        rng = np.random.default_rng(2)
+        for _ in range(8):
+            terms = rng.choice(100, size=rng.integers(1, 4), replace=False)
+            qt = jnp.asarray([list(terms) + [0] * (4 - len(terms))],
+                             jnp.int32)
+            qm = jnp.asarray([[1] * len(terms) + [0] * (4 - len(terms))],
+                             bool)
+            d_dev, s_dev = query_step(img, qt, qm, k=10, max_blocks=mb,
+                                      mode="bm25", doclens=jnp.asarray(dl))
+            d_host, s_host = Q.ranked_bm25(
+                idx, [vocab[i] for i in terms], dl.astype(np.float64), k=10)
+            got = np.sort(np.asarray(s_dev[0]))[::-1][: len(s_host)]
+            assert np.allclose(got, s_host, rtol=2e-4)
+
+
+class TestRemesh:
+    def test_remesh_preserves_values(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.distributed.sharding import lm_param_rules, remesh
+        mesh1 = jax.make_mesh((1, 1), ("data", "model"))
+        tree = {"embed": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                "layers": {"wq": jnp.ones((2, 8, 8))}}
+        out = remesh(tree, mesh1, lm_param_rules(mesh1))
+        assert np.allclose(np.asarray(out["embed"]),
+                           np.asarray(tree["embed"]))
+        assert jax.tree.structure(out) == jax.tree.structure(tree)

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode executes the Pallas bodies in Python on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.collate import collate
+from repro.core.device_index import build_device_image, decode_blocks
+from repro.core.index import DynamicIndex
+from repro.kernels.dvbyte_decode.ops import dvbyte_decode_blocks
+from repro.kernels.intersect.ops import intersect_sorted
+from repro.kernels.intersect.ref import PAD, intersect_ref
+from repro.kernels.retrieval_dot.ops import candidate_scores
+from repro.kernels.retrieval_dot.ref import retrieval_dot_ref
+from repro.kernels.topk_score.ops import score_accumulate
+from repro.kernels.topk_score.ref import score_ref
+
+from repro.core import dvbyte as dv
+
+
+class TestDvbyteDecodeKernel:
+    @pytest.mark.parametrize("F", [2, 3, 4, 8, 16])
+    @pytest.mark.parametrize("tile", [64, 256])
+    def test_synthetic_stream_sweep(self, F, tile):
+        rng = np.random.default_rng(F * 100 + tile)
+        gs = rng.integers(1, 1 << 22, 400).astype(np.int64)
+        fs = np.where(rng.random(400) < 0.8,
+                      rng.integers(1, max(F, 2), 400),
+                      rng.integers(1, 900, 400)).astype(np.int64)
+        # pack into 64-byte blocks, codes never split (block-store rule)
+        blocks, cur, pos = [], bytearray(64), 4
+        for g, f in zip(gs, fs):
+            tmp = bytearray(16)
+            L = dv.dvbyte_encode_into(tmp, 0, int(g), int(f), F)
+            if pos + L > 64:
+                blocks.append(bytes(cur))
+                cur, pos = bytearray(64), 4
+            cur[pos:pos + L] = tmp[:L]
+            pos += L
+        blocks.append(bytes(cur))
+        arr = np.frombuffer(b"".join(blocks), np.uint8).reshape(-1, 64).copy()
+        st = jnp.full(len(arr), 4, jnp.int32)
+        en = jnp.full(len(arr), 64, jnp.int32)
+        g1, f1, v1 = decode_blocks(jnp.asarray(arr), st, en, F)
+        g2, f2, v2 = dvbyte_decode_blocks(jnp.asarray(arr), st, en, F=F,
+                                          tile=tile)
+        assert (np.asarray(v1) == np.asarray(v2)).all()
+        assert (np.asarray(g1 * v1) == np.asarray(g2 * v2)).all()
+        assert (np.asarray(f1 * v1) == np.asarray(f2 * v2)).all()
+        # and the decoded pairs equal the source
+        assert np.asarray(g1)[np.asarray(v1)].tolist() == gs.tolist()
+        assert np.asarray(f1)[np.asarray(v1)].tolist() == fs.tolist()
+
+    def test_real_index_blocks(self, zipf_docs):
+        vocab, docs = zipf_docs
+        idx = DynamicIndex(B=64)
+        for doc in docs[:300]:
+            idx.add_document(doc)
+        col = collate(idx)
+        img = build_device_image(col, [t.encode() for t in vocab])
+        NB = img.blocks.shape[0]
+        start = np.full(NB, 4, np.int32)
+        end = np.full(NB, 64, np.int32)
+        for i in range(len(vocab)):
+            s, n = int(img.term_slot[i]), int(img.term_nblk[i])
+            if n == 0:
+                continue
+            start[s] = int(img.term_skip[i])
+            end[s + n - 1] = int(img.term_nx[i])
+        g1, f1, v1 = decode_blocks(img.blocks, jnp.asarray(start),
+                                   jnp.asarray(end), 4)
+        g2, f2, v2 = dvbyte_decode_blocks(img.blocks, jnp.asarray(start),
+                                          jnp.asarray(end), F=4, tile=128)
+        assert (np.asarray(v1) == np.asarray(v2)).all()
+        assert (np.asarray(g1 * v1) == np.asarray(g2 * v2)).all()
+        assert (np.asarray(f1 * v1) == np.asarray(f2 * v2)).all()
+
+
+class TestIntersectKernel:
+    @pytest.mark.parametrize("na,nb,tile", [(100, 1000, 128), (1000, 77, 64),
+                                            (513, 900, 256), (5, 5, 128)])
+    def test_sweep(self, na, nb, tile):
+        rng = np.random.default_rng(na * nb)
+        a = np.unique(rng.integers(1, 8000, na)).astype(np.int32)
+        b = np.unique(rng.integers(1, 8000, nb)).astype(np.int32)
+        got = intersect_sorted(jnp.asarray(a), jnp.asarray(b),
+                               tile_a=tile, tile_b=tile)
+        exp = intersect_ref(jnp.asarray(a), jnp.asarray(b))
+        assert np.asarray(got).tolist() == np.asarray(exp).tolist()
+
+    def test_disjoint_ranges_skip(self):
+        a = jnp.asarray(np.arange(1, 513, dtype=np.int32))
+        b = jnp.asarray(np.arange(10_000, 10_512, dtype=np.int32))
+        got = intersect_sorted(a, b, tile_a=128, tile_b=128)
+        assert not np.asarray(got).any()
+
+
+class TestScoreKernel:
+    @pytest.mark.parametrize("m,n,tm,tn", [(5000, 3000, 512, 512),
+                                           (100, 100, 64, 64),
+                                           (7000, 1234, 1024, 256)])
+    def test_sweep(self, m, n, tm, tn):
+        rng = np.random.default_rng(m + n)
+        d = rng.integers(0, n, m).astype(np.int32)
+        w = rng.random(m).astype(np.float32)
+        got = score_accumulate(jnp.asarray(d), jnp.asarray(w), n_docs=n,
+                               tile_m=tm, tile_n=tn)
+        exp = score_ref(jnp.asarray(d), jnp.asarray(w), n)
+        assert np.allclose(np.asarray(got), np.asarray(exp),
+                           rtol=1e-5, atol=1e-5)
+
+
+class TestRetrievalDotKernel:
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("q,n,d", [(8, 700, 96), (1, 2048, 256),
+                                       (17, 333, 64)])
+    def test_sweep(self, q, n, d, dtype):
+        rng = np.random.default_rng(q * n)
+        qv = jnp.asarray(rng.standard_normal((q, d)), dtype)
+        cv = jnp.asarray(rng.standard_normal((n, d)), dtype)
+        got = candidate_scores(qv, cv, tile_q=8, tile_n=128, tile_d=32)
+        exp = retrieval_dot_ref(qv, cv)
+        tol = 1e-4 if dtype == np.float32 else 2e-2
+        assert np.allclose(np.asarray(got), np.asarray(exp),
+                           rtol=tol, atol=tol)

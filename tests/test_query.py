@@ -1,0 +1,82 @@
+"""Query-engine tests (paper §3.6, §4.6)."""
+
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.index import DynamicIndex
+
+
+@pytest.fixture(scope="module")
+def built(zipf_docs):
+    vocab, docs = zipf_docs
+    out = {}
+    for growth in ("const", "triangle"):
+        idx = DynamicIndex(B=48, growth=growth)
+        for doc in docs:
+            idx.add_document(doc)
+        out[growth] = idx
+    return vocab, out
+
+
+@pytest.mark.parametrize("growth", ["const", "triangle"])
+def test_conjunctive_vs_bruteforce(built, growth):
+    vocab, idxs = built
+    idx = idxs[growth]
+    rng = np.random.default_rng(0)
+    for _ in range(150):
+        terms = [vocab[i] for i in
+                 rng.choice(120, size=rng.integers(1, 5), replace=False)]
+        got = Q.conjunctive_query(idx, terms)
+        exp = Q.brute_conjunctive(idx, terms)
+        assert got.tolist() == exp.tolist()
+
+
+def test_conjunctive_missing_term(built):
+    vocab, idxs = built
+    assert len(Q.conjunctive_query(idxs["const"], ["zzz_not_there"])) == 0
+    assert len(Q.conjunctive_query(idxs["const"],
+                                   [vocab[0], "zzz_not_there"])) == 0
+
+
+@pytest.mark.parametrize("growth", ["const", "triangle"])
+def test_ranked_daat_equals_taat(built, growth):
+    vocab, idxs = built
+    idx = idxs[growth]
+    rng = np.random.default_rng(1)
+    for _ in range(40):
+        terms = [vocab[i] for i in
+                 rng.choice(200, size=rng.integers(1, 4), replace=False)]
+        d1, s1 = Q.ranked_disjunctive(idx, terms, k=10)
+        d2, s2 = Q.ranked_disjunctive_taat(idx, terms, k=10)
+        assert np.allclose(np.sort(s1), np.sort(s2), rtol=1e-9)
+
+
+def test_seek_geq_cursor(built):
+    vocab, idxs = built
+    idx = idxs["const"]
+    t = vocab[0]  # most common term: long multi-block chain
+    docids, _ = idx.postings(t)
+    cur = Q.PostingsCursor(idx.store, idx.lookup(t))
+    # seek to every 7th docid and to gaps between docids
+    for target in list(docids[::7]) + list(docids[:-1:5] + 1):
+        cur2 = Q.PostingsCursor(idx.store, idx.lookup(t))
+        found = cur2.seek_geq(int(target))
+        expect = docids[docids >= int(target)]
+        if len(expect) == 0:
+            assert not found
+        else:
+            assert found and cur2.docid == expect[0]
+
+
+def test_queries_interleaved_with_ingest(zipf_docs):
+    """Immediate access under a mixed operation stream (Figure 1's point)."""
+    vocab, docs = zipf_docs
+    idx = DynamicIndex(B=64)
+    rng = np.random.default_rng(3)
+    for i, doc in enumerate(docs[:200]):
+        idx.add_document(doc)
+        if i % 7 == 0:
+            terms = [doc[0], doc[min(1, len(doc) - 1)]]
+            got = Q.conjunctive_query(idx, terms)
+            assert idx.num_docs in got.tolist()  # the just-added doc matches

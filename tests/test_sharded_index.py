@@ -1,0 +1,121 @@
+"""Distributed index tests: multi-device shard_map query correctness,
+run in a subprocess with forced device count (never pollute the test
+process's jax device state)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.index import DynamicIndex
+    from repro.core.collate import collate
+    from repro.core.device_index import build_device_image
+    from repro.core.query import ranked_disjunctive_taat
+    from repro.core.sharded_index import (make_sharded_query_step,
+                                          sharded_input_specs, stack_images)
+
+    rng = np.random.default_rng(7)
+    VOCAB = [f"w{i}" for i in range(120)]
+    vb = [t.encode() for t in VOCAB]
+    probs = 1.0 / np.arange(1, 121) ** 1.07
+    probs /= probs.sum()
+    S = 4  # document shards
+    per_shard = 150
+    shards = []
+    all_docs = []
+    for s in range(S):
+        idx = DynamicIndex(B=64, growth="const")
+        docs = [[VOCAB[i] for i in rng.choice(120, size=rng.integers(8, 80),
+                                              p=probs)]
+                for _ in range(per_shard)]
+        for d in docs:
+            idx.add_document(d)
+        all_docs.append(docs)
+        shards.append(collate(idx))
+    images = [build_device_image(sh, vb) for sh in shards]
+    # pad metadata vocab-aligned; stack along shard axis
+    img = stack_images(images)
+    NBs = img.blocks.shape[0] // S
+    # local slots are relative to each shard's own block array: offset them
+    mesh = jax.make_mesh((S, 2), ("data", "model"))
+    mb = int(max(im.term_nblk.max() for im in images))
+    fn, ins, outs = make_sharded_query_step(mesh, k=10, max_blocks=mb,
+                                            num_docs=per_shard)
+    jf = jax.jit(fn, in_shardings=ins, out_shardings=outs)
+    Q, T = 4, 4
+    qt = np.zeros((Q, T), np.int32)
+    qm = np.zeros((Q, T), bool)
+    queries = []
+    for qi in range(Q):
+        terms = rng.choice(60, size=rng.integers(1, T + 1), replace=False)
+        queries.append(terms)
+        qt[qi, :len(terms)] = terms
+        qm[qi, :len(terms)] = True
+    with mesh:
+        d, s = jf(img.blocks, img.term_slot, img.term_nblk, img.term_skip,
+                  img.term_nx, img.term_ft, jnp.asarray(qt),
+                  jnp.asarray(qm))
+    d, s = np.asarray(d), np.asarray(s)
+    # host oracle: score per shard, globalize ids, merge
+    ok = True
+    for qi, terms in enumerate(queries):
+        cand = []
+        for si, sh in enumerate(shards):
+            dd, ss = ranked_disjunctive_taat(sh, [VOCAB[i] for i in terms],
+                                             k=10)
+            for ddi, ssi in zip(dd, ss):
+                cand.append((float(ssi), int(ddi) + si * per_shard))
+        cand.sort(key=lambda x: -x[0])
+        exp = sorted([c[0] for c in cand[:10]], reverse=True)
+        got = sorted(s[qi].tolist(), reverse=True)[:len(exp)]
+        if not np.allclose(got, exp, rtol=1e-4):
+            ok = False
+            print("MISMATCH", qi, got[:5], exp[:5])
+    print(json.dumps({"ok": ok}))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_query_matches_host_merge():
+    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, timeout=600,
+                         env=dict(os.environ, PYTHONPATH="src"))
+    assert out.returncode == 0, out.stderr[-3000:]
+    last = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    assert json.loads(last)["ok"], out.stdout[-2000:]
+
+
+@pytest.mark.slow
+def test_multipod_mesh_compiles():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from repro.core.sharded_index import (make_sharded_query_step,
+                                              sharded_input_specs)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        fn, ins, outs = make_sharded_query_step(mesh, k=5, max_blocks=8,
+                                                num_docs=1 << 10)
+        specs = sharded_input_specs(mesh, shard_blocks=512, B=64,
+                                    vocab=1 << 10, qbatch=8, qterms=4)
+        with mesh:
+            c = jax.jit(fn, in_shardings=ins,
+                        out_shardings=outs).lower(*specs).compile()
+        txt = c.as_text()
+        assert "all-gather" in txt
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600,
+                         env=dict(os.environ, PYTHONPATH="src"))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
