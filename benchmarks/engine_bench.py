@@ -1,0 +1,144 @@
+"""Engine backend comparison: host vs device-oracle vs Pallas kernels.
+
+    PYTHONPATH=src python benchmarks/engine_bench.py \
+        [--docs 1200] [--queries 32] [--out BENCH_engine.json]
+
+Workloads (per backend, warm — one untimed pass compiles the device/Pallas
+programs first):
+
+  * ``conjunctive``  — 2-term Boolean AND batches;
+  * ``ranked_tfidf`` — top-10 disjunctive TF×IDF batches;
+  * ``bm25``         — top-10 BM25 batches;
+
+plus the **delta-refresh** scenario: after a full collation, ingest keeps
+running and device queries are interleaved — we time the incremental
+``DeltaIndex`` refresh against a full ``collate()`` + image rebuild, and
+record the fragmentation the delta has accumulated (``collation_stats``).
+Results land in ``BENCH_engine.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _timed(fn, reps=3):
+    fn()  # warm (compiles)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=1200)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+
+    from benchmarks.common import corpus
+    from repro.core.collate import collation_stats, collate
+    from repro.core.device_index import build_device_image
+    from repro.engine import Engine, Query
+
+    docs = corpus(args.docs)
+    rng = np.random.default_rng(17)
+    freeze_at = int(args.docs * 0.7)
+
+    eng = Engine(B=64, growth="const")
+    t0 = time.perf_counter()
+    for d in docs[:freeze_at]:
+        eng.add_document(d)
+    ingest_s = time.perf_counter() - t0
+    eng.collate_now()
+    for d in docs[freeze_at:]:
+        eng.add_document(d)
+
+    # query terms drawn from the ingested vocabulary, skewed to common terms
+    vocab = [t.decode() for t in eng.vocab]
+    fts = eng.global_fts()
+    common = [vocab[i] for i in np.argsort(-fts)[:200]]
+
+    def make_batch(mode, nterms):
+        out = []
+        for _ in range(args.queries):
+            ts = tuple(common[i] for i in
+                       rng.choice(len(common), size=nterms, replace=False))
+            out.append(Query(terms=ts, mode=mode, k=10))
+        return out
+
+    results = []
+    for mode, nterms in (("conjunctive", 2), ("ranked_tfidf", 3),
+                         ("bm25", 3)):
+        batch = make_batch(mode, nterms)
+        for backend in ("host", "device", "pallas"):
+            forced = [Query(terms=q.terms, mode=q.mode, k=q.k,
+                            backend=backend) for q in batch]
+            secs = _timed(lambda: eng.execute_many(forced))
+            results.append({
+                "workload": mode, "backend": backend,
+                "batch": args.queries,
+                "us_per_query": 1e6 * secs / args.queries,
+            })
+            print(f"{mode:13s} {backend:7s} "
+                  f"{results[-1]['us_per_query']:10.1f} us/query")
+
+    # ---- delta refresh vs full re-collation ----
+    dev = eng.backends["device"]
+    extra = corpus(args.docs + 200)[args.docs:]
+    for d in extra:
+        eng.add_document(d)
+    t0 = time.perf_counter()
+    dev.refresh()
+    delta_refresh_s = time.perf_counter() - t0
+    frag = collation_stats(eng.index)
+
+    t0 = time.perf_counter()
+    col = collate(eng.index)
+    build_device_image(col, eng.vocab)
+    full_rebuild_s = time.perf_counter() - t0
+
+    # interleaved serving: ingest+device-query stream on the delta path
+    qs = make_batch("ranked_tfidf", 2)[:8]
+    t0 = time.perf_counter()
+    for i, d in enumerate(corpus(args.docs + 240)[args.docs + 200:]):
+        eng.add_document(d)
+        if i % 8 == 7:
+            eng.execute_many([Query(terms=q.terms, mode=q.mode, k=q.k,
+                                    backend="device") for q in qs])
+    concurrent_s = time.perf_counter() - t0
+
+    payload = {
+        "config": {"docs": eng.index.num_docs,
+                   "postings": eng.index.num_postings,
+                   "vocab": len(eng.vocab), "queries": args.queries,
+                   "ingest_docs_per_s": freeze_at / max(ingest_s, 1e-9)},
+        "results": results,
+        "delta": {
+            "delta_blocks": dev.delta_blocks,
+            "total_blocks": eng.index.store.nblocks,
+            "frag_ratio": frag["frag_ratio"],
+            "incremental_refresh_ms": 1e3 * delta_refresh_s,
+            "full_collate_rebuild_ms": 1e3 * full_rebuild_s,
+            "speedup": full_rebuild_s / max(delta_refresh_s, 1e-9),
+            "concurrent_ingest_query_s": concurrent_s,
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\ndelta refresh {payload['delta']['incremental_refresh_ms']:.1f} ms"
+          f" vs full rebuild {payload['delta']['full_collate_rebuild_ms']:.1f}"
+          f" ms ({payload['delta']['speedup']:.1f}x)  -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,10 @@
 Builds an immediate-access dynamic index over a synthetic docstream,
 queries it while ingesting, collates it (§5.5), freezes it to a static
 compressed index (§3.1), and prints the size story (Tables 8/9/13).
+
+This walks the paper's raw structures; for the planner-driven multi-backend
+query path (host / device oracle / Pallas kernels, incremental device-image
+refresh) see examples/engine_quickstart.py.
 """
 
 import numpy as np

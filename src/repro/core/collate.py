@@ -12,6 +12,13 @@ The paper performs the permutation through a disk file with ingest stalled;
 we perform it in memory with the same observable result (a brief
 stop-the-world copy), and expose ``collate()`` both as an in-place operation
 and as a pure function returning a new index.
+
+Collation is the FREEZE point of the engine's device-image lifecycle
+(``repro.engine``): ``Engine.collate_now`` collates, snapshots the result as
+the frozen device image, and captures a ``DeltaBaseline`` so every later
+refresh ships only post-freeze blocks to the device.  ``collation_stats``
+quantifies how fragmented the chains currently are — the signal for deciding
+when a full re-collation pays for itself.
 """
 
 from __future__ import annotations
@@ -69,6 +76,31 @@ def collate(index: DynamicIndex) -> DynamicIndex:
     out.num_words = index.num_words
     out._cache = {}
     return out
+
+
+def collation_stats(index: DynamicIndex) -> dict:
+    """Fragmentation report: how far the store is from collated order.
+
+    Returns chain/block counts plus ``fragmented_blocks`` — blocks that do
+    not sit at their chain-contiguous position (each is one non-sequential
+    cache line / DMA descriptor at query time).  ``frag_ratio`` near 0 means
+    a fresh collation would buy little (Table 14's locality win is already
+    in hand)."""
+    store = index.store
+    B = store.B
+    chains = blocks = fragmented = 0
+    for h_ptr in index.head_ptrs():
+        chains += 1
+        expect = h_ptr
+        for ptr, z, _ in store.chain_slots(h_ptr):
+            blocks += 1
+            if ptr != expect:
+                fragmented += 1
+            size = B if store.const_mode else store.block_size_at(z)
+            expect = ptr + (size + B - 1) // B
+    return {"chains": chains, "blocks": blocks,
+            "fragmented_blocks": fragmented,
+            "frag_ratio": fragmented / max(1, blocks)}
 
 
 def is_collated(index: DynamicIndex) -> bool:

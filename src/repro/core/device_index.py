@@ -26,15 +26,16 @@ position" with a validity mask — no dynamic shapes anywhere.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .blockstore import H
+from .blockstore import _OFF_NPTR, H
 from .collate import is_collated
+from .dvbyte import dvbyte_decode_from
 from .index import DynamicIndex
 
 
@@ -99,6 +100,227 @@ def build_device_image(index: DynamicIndex, vocab: list[bytes],
         term_nblk=jnp.asarray(nblk), term_skip=jnp.asarray(skip),
         term_nx=jnp.asarray(nxs), term_ft=jnp.asarray(fts),
         num_docs=index.num_docs, F=index.F)
+
+
+# --------------------------------------------------------------------------
+# incremental device-image refresh: frozen image + live delta (engine/)
+# --------------------------------------------------------------------------
+#
+# A full ``collate()`` + ``build_device_image()`` is stop-the-world; the
+# engine instead keeps ONE frozen collated image plus a small ``DeltaIndex``
+# covering only postings appended since the freeze.  Docids are ordinal and
+# every document's postings are written before the next document starts, so
+# docs <= baseline.num_docs live wholly in the frozen image and newer docs
+# wholly in the delta: the two docid spaces are disjoint and merging per-image
+# results (top-k concat / bitmap OR) is exact.
+
+
+@dataclass
+class DeltaBaseline:
+    """Per-term tail state captured at freeze time (host-side numpy).
+
+    For each term id the delta decoder later needs: which block was the tail
+    at the freeze (``tail_slot``), where its write cursor stood (``nx``), the
+    last docid coded (``lastd`` — new in-tail postings are plain d-gaps from
+    it), the tail block's first docid (``dnum`` — blocks appended later code
+    their leading b-gap against it), and ``ft`` (so refresh can detect which
+    terms changed at all).
+    """
+
+    tail_slot: np.ndarray   # (Vf,) i64
+    nx: np.ndarray          # (Vf,) i64
+    lastd: np.ndarray       # (Vf,) i64
+    dnum: np.ndarray        # (Vf,) i64
+    ft: np.ndarray          # (Vf,) i64
+    num_docs: int           # N at freeze time
+    nblocks: int            # store.nblocks at freeze time
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.tail_slot)
+
+
+def capture_delta_baseline(index: DynamicIndex,
+                           vocab: list[bytes]) -> DeltaBaseline:
+    """Record every term's tail state so later appends can be snapshotted
+    incrementally.  Called at the same moment the frozen image is built."""
+    store = index.store
+    if not store.const_mode:
+        raise ValueError("delta images require Const blocks")
+    if index.word_level:
+        raise ValueError("delta images are doc-level")
+    V = len(vocab)
+    B = store.B
+    out = DeltaBaseline(
+        tail_slot=np.zeros(V, np.int64), nx=np.zeros(V, np.int64),
+        lastd=np.zeros(V, np.int64), dnum=np.zeros(V, np.int64),
+        ft=np.zeros(V, np.int64), num_docs=index.num_docs,
+        nblocks=store.nblocks)
+    for i, t in enumerate(vocab):
+        h_ptr = index.lookup(t)
+        if h_ptr is None:
+            continue
+        hb = h_ptr * B
+        t_ptr = store.get_tptr(hb)
+        out.tail_slot[i] = t_ptr
+        out.nx[i] = store.get_nx(hb)
+        out.lastd[i] = store.get_lastd(hb)
+        # slot 0 of the tail block is d_num while the block IS the tail —
+        # exactly the window in which we read it (head included: its slot 0
+        # is d_num until the chain grows).
+        out.dnum[i] = store._get_u32(t_ptr * B + _OFF_NPTR)
+        out.ft[i] = store.get_ft(hb)
+    return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class DeltaIndex:
+    """Flat-array snapshot of postings appended since a DeltaBaseline.
+
+    Shares the block/decode layout of :class:`DeviceIndex` (so
+    :func:`query_step` runs on it unchanged) plus two per-term docid bases:
+    the first delta posting of a term is a d-gap from ``term_lastd0`` if it
+    lands in the old tail block, while blocks appended after the freeze code
+    b-gaps chained from ``term_dnum0`` (the old tail's first docid).
+    """
+
+    blocks: jnp.ndarray      # (ND, B) uint8 — compacted delta blocks
+    term_slot: jnp.ndarray   # (V,) i32 — first delta block per term
+    term_nblk: jnp.ndarray   # (V,) i32 — delta chain length (0 = unchanged)
+    term_skip: jnp.ndarray   # (V,) i32 — start byte inside the first block
+    term_nx: jnp.ndarray     # (V,) i32 — tail write cursor (bytes)
+    term_ft: jnp.ndarray     # (V,) i32 — GLOBAL f_t (for exact idf)
+    term_lastd0: jnp.ndarray  # (V,) i32 — last docid coded before the freeze
+    term_dnum0: jnp.ndarray  # (V,) i32 — first docid of the first delta block
+    num_docs: int            # static docid-space capacity (not live N)
+    F: int                   # static fold threshold
+
+    def tree_flatten(self):
+        return ((self.blocks, self.term_slot, self.term_nblk, self.term_skip,
+                 self.term_nx, self.term_ft, self.term_lastd0,
+                 self.term_dnum0), (self.num_docs, self.F))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, num_docs=aux[0], F=aux[1])
+
+
+def build_delta_image(index: DynamicIndex, vocab: list[bytes],
+                      baseline: DeltaBaseline, *, num_docs: int,
+                      pad_vocab: int | None = None,
+                      pad_blocks: int | None = None,
+                      global_ft: np.ndarray | None = None) -> DeltaIndex:
+    """Snapshot only the blocks appended (or still filling) since ``baseline``.
+
+    Cost is proportional to the delta, not the index: unchanged terms are
+    detected by an ``f_t`` comparison and contribute nothing; changed terms
+    copy their old tail block plus any blocks allocated after the freeze.
+    No ``collate()`` involved — chains are compacted on the fly into the
+    fresh delta block array, so the device gather stays contiguous.
+
+    ``global_ft`` is the current per-term-id f_t array (e.g. the engine's
+    incrementally maintained counters).  When given, changed terms are
+    short-listed with one vectorized comparison against ``baseline.ft`` and
+    unchanged terms are never touched at all; without it, every term pays a
+    lookup + head-field read (O(V) per refresh).
+    """
+    store = index.store
+    if not store.const_mode:
+        raise ValueError("delta images require Const blocks")
+    if index.word_level:
+        raise ValueError("delta images are doc-level")
+    B = store.B
+    V = len(vocab)
+    Vp = max(V, pad_vocab or 0)
+    Vf = baseline.vocab_size
+    slot = np.zeros(Vp, np.int32)
+    nblk = np.zeros(Vp, np.int32)
+    skip = np.zeros(Vp, np.int32)
+    nxs = np.zeros(Vp, np.int32)
+    fts = np.zeros(Vp, np.int32)
+    lastd0 = np.zeros(Vp, np.int32)
+    dnum0 = np.zeros(Vp, np.int32)
+    if global_ft is not None:
+        fts[:V] = global_ft[:V]
+        changed = np.flatnonzero(
+            np.concatenate([np.asarray(global_ft[:Vf]) != baseline.ft[:V],
+                            np.ones(V - min(Vf, V), bool)]))
+        candidates = [(int(i), vocab[int(i)]) for i in changed]
+    else:
+        candidates = list(enumerate(vocab))
+    chunks: list[np.ndarray] = []
+    write = 0
+    for i, t in candidates:
+        h_ptr = index.lookup(t)
+        if h_ptr is None:
+            continue
+        hb = h_ptr * B
+        cur_ft = store.get_ft(hb)
+        fts[i] = cur_ft
+        if i < Vf and cur_ft == baseline.ft[i]:
+            continue  # no postings since the freeze
+        if i < Vf and baseline.ft[i] > 0:
+            first_slot = int(baseline.tail_slot[i])
+            skip[i] = int(baseline.nx[i])
+            lastd0[i] = int(baseline.lastd[i])
+            dnum0[i] = int(baseline.dnum[i])
+        else:
+            # term born after the freeze: the delta is its whole chain and
+            # the head's leading code is an absolute docid (lastd starts 0)
+            first_slot = h_ptr
+            skip[i] = store.head_fixed + int(store.I[hb + store.head_fixed - 1])
+            lastd0[i] = 0
+            (g, _), _ = dvbyte_decode_from(store.I, hb + skip[i], store.F)
+            dnum0[i] = g  # d_num of the head = its first docid
+        # walk old-tail -> current tail via n_ptr links
+        t_ptr = store.get_tptr(hb)
+        chain = [first_slot]
+        p = first_slot
+        while p != t_ptr:
+            p = store._get_u32(p * B + _OFF_NPTR)
+            chain.append(p)
+        slot[i] = write
+        nblk[i] = len(chain)
+        nxs[i] = store.get_nx(hb)
+        for ptr in chain:
+            chunks.append(store.I[ptr * B:(ptr + 1) * B])
+        write += len(chain)
+    nd = max(write, pad_blocks or 0, 1)
+    blocks = np.zeros((nd, B), np.uint8)
+    if chunks:
+        blocks[:write] = np.stack(chunks)
+    return DeltaIndex(
+        blocks=jnp.asarray(blocks), term_slot=jnp.asarray(slot),
+        term_nblk=jnp.asarray(nblk), term_skip=jnp.asarray(skip),
+        term_nx=jnp.asarray(nxs), term_ft=jnp.asarray(fts),
+        term_lastd0=jnp.asarray(lastd0), term_dnum0=jnp.asarray(dnum0),
+        num_docs=num_docs, F=index.F)
+
+
+def with_global_stats(image: DeviceIndex, term_ft: np.ndarray,
+                      num_docs: int, pad_vocab: int | None = None
+                      ) -> DeviceIndex:
+    """Rebase a frozen image's scoring statistics to the LIVE collection.
+
+    Merged frozen+delta querying is only exact if both sides weight postings
+    with the global f_t and N; the frozen block bytes stay untouched — only
+    the per-term metadata arrays are re-uploaded (and zero-padded so term ids
+    minted after the freeze gather empty chains instead of clipping).
+    """
+    V = image.term_slot.shape[0]
+    Vp = max(V, pad_vocab or 0)
+
+    def pad(x):
+        return jnp.pad(x, (0, Vp - x.shape[0]))
+
+    ft = np.zeros(Vp, np.int32)
+    ft[:min(len(term_ft), Vp)] = term_ft[:Vp]
+    return replace(image, term_slot=pad(image.term_slot),
+                   term_nblk=pad(image.term_nblk),
+                   term_skip=pad(image.term_skip),
+                   term_nx=pad(image.term_nx),
+                   term_ft=jnp.asarray(ft), num_docs=num_docs)
 
 
 # --------------------------------------------------------------------------
@@ -193,7 +415,8 @@ MAX_BLOCKS = 64  # per-term chain-length cap for the gather (pad/truncate)
 def query_step(image: DeviceIndex, qterms: jnp.ndarray, qmask: jnp.ndarray,
                k: int = 10, mode: str = "ranked",
                max_blocks: int = MAX_BLOCKS, decode_fn=None,
-               doclens: jnp.ndarray | None = None):
+               doclens: jnp.ndarray | None = None,
+               n_stat: jnp.ndarray | None = None):
     """Batched query execution against a device image.
 
     Args:
@@ -202,8 +425,17 @@ def query_step(image: DeviceIndex, qterms: jnp.ndarray, qmask: jnp.ndarray,
         (top-k TF×IDF, sort-based), "bm25" (top-k BM25, sort-based —
         requires ``doclens`` (N+1,) f32; paper §6.2's future work), or
         "conjunctive" (hit bitmap counts).
+      n_stat: optional dynamic collection size used for idf/avgdl statistics;
+        defaults to ``image.num_docs``.  The engine's frozen+delta path sizes
+        accumulators by a fixed capacity (``image.num_docs``) but must score
+        with the live N, which changes every refresh — passing it dynamically
+        avoids a recompile per ingested document.
     Returns (top docids (Q, k) i32, top scores (Q, k) f32) for ranked
     modes, or (matches (Q, N) bool, counts) for conjunctive mode.
+
+    ``image`` may also be a :class:`DeltaIndex`; the only difference is docid
+    reconstruction, which chains from the delta's per-term bases instead of
+    zero (see ``DeltaIndex`` docstring).
     """
     B = image.blocks.shape[1]
     Q, T = qterms.shape
@@ -239,11 +471,23 @@ def query_step(image: DeviceIndex, qterms: jnp.ndarray, qmask: jnp.ndarray,
     # per-block first gaps
     first_gap = jnp.max(jnp.where(
         jnp.cumsum(valid, axis=2) == 1, gv, 0), axis=2)  # (QT, MB)
-    block_first = jnp.cumsum(first_gap, axis=1)        # absolute first docids
+    if isinstance(image, DeltaIndex):
+        # delta chains don't start at docid 0: the first block's leading code
+        # is a d-gap from lastd0 (it continues the old tail), while later
+        # blocks chain b-gaps from dnum0 (the old tail's first docid)
+        lastd0 = image.term_lastd0[flat_terms]
+        dnum0 = image.term_dnum0[flat_terms]
+        cum = jnp.cumsum(first_gap, axis=1)
+        bf0 = lastd0[:, None] + first_gap[:, :1]
+        bfr = dnum0[:, None] + (cum - first_gap[:, :1])
+        block_first = jnp.concatenate([bf0, bfr[:, 1:]], axis=1)
+    else:
+        block_first = jnp.cumsum(first_gap, axis=1)    # absolute first docids
     docid = block_first[:, :, None] + (within - first_gap[:, :, None])
     docid = jnp.where(valid, docid, 0)                 # (QT, MB, B)
     # ---- step 4: scoring ----
     N = image.num_docs
+    Ns = jnp.float32(N) if n_stat is None else n_stat.astype(jnp.float32)
     flat_docs = docid.reshape(Q, -1)
     if mode == "conjunctive":
         hits = jnp.zeros((Q, N + 1), jnp.int32)
@@ -257,16 +501,16 @@ def query_step(image: DeviceIndex, qterms: jnp.ndarray, qmask: jnp.ndarray,
     if mode == "bm25":
         # Okapi BM25 (k1=0.9, b=0.4): saturated tf with length normalization
         k1, b = 0.9, 0.4
-        idf = jnp.log1p((N - ft + 0.5) / (ft + 0.5))
+        idf = jnp.log1p((Ns - ft + 0.5) / (ft + 0.5))
         idf = (idf * qmask.reshape(-1)).reshape(Q, T)
         dl = doclens[docid.reshape(Q, -1)]                  # (Q, P)
-        avgdl = jnp.maximum(doclens[1:].sum() / N, 1e-9)
+        avgdl = jnp.maximum(doclens[1:].sum() / Ns, 1e-9)
         fv = jnp.where(valid, f, 0).astype(jnp.float32).reshape(Q, -1)
         tf = (fv * (k1 + 1.0)) / (fv + k1 * (1.0 - b + b * dl / avgdl))
         w = (tf.reshape(Q, T, max_blocks, B)
              * idf[:, :, None, None]).reshape(Q, -1)
     else:
-        idf = jnp.log1p(N / ft)
+        idf = jnp.log1p(Ns / ft)
         idf = (idf * qmask.reshape(-1)).reshape(Q, T)
         w = jnp.log1p(jnp.where(valid, f, 0).astype(jnp.float32))
         w = w.reshape(Q, T, max_blocks, B) * idf[:, :, None, None]

@@ -12,11 +12,19 @@ continues (immediate access):
 
 A vectorized term-at-a-time scorer and a brute-force oracle are included for
 benchmarks and tests.
+
+These functions are the HOST backend of the unified query engine
+(``repro.engine``): callers that want planner-driven routing across the
+host / device-oracle / Pallas backends should go through
+``Engine.execute(Query(...))`` rather than calling these directly; the
+engine guarantees identical results across backends (differential-tested)
+and keeps the device images refreshed incrementally.
 """
 
 from __future__ import annotations
 
 import heapq
+from typing import NamedTuple
 
 import numpy as np
 
@@ -139,12 +147,36 @@ class PostingsCursor:
 
 
 # --------------------------------------------------------------------------
+# term statistics (planner inputs)
+# --------------------------------------------------------------------------
+
+
+class TermStats(NamedTuple):
+    """Cheap per-term observables: f_t is one head-block field read, the
+    chain length one link walk.  The engine planner routes on these."""
+
+    ft: int = 0
+    nblocks: int = 0
+
+
+def term_stats(index: DynamicIndex, term) -> TermStats:
+    h_ptr = index.lookup(term)
+    if h_ptr is None:
+        return TermStats(0, 0)
+    store = index.store
+    return TermStats(store.get_ft(h_ptr * store.B),
+                     sum(1 for _ in store.chain_slots(h_ptr)))
+
+
+# --------------------------------------------------------------------------
 # conjunctive Boolean (DAAT with skipping)
 # --------------------------------------------------------------------------
 
 
 def conjunctive_query(index: DynamicIndex, terms) -> np.ndarray:
     """All docids containing every query term (sorted ascending)."""
+    if not terms:
+        return np.zeros(0, dtype=np.int64)
     ptrs = []
     for t in terms:
         h = index.lookup(t)

@@ -20,6 +20,16 @@ local hit bitmaps concatenate, so the collective is a pure reshard.
 
 Local docids are 1..N_shard; global ids are formed as
 ``shard_rank * N_shard + local`` inside the mapped function.
+
+Two layers live here:
+
+  * the jitted ``shard_map`` query step below (device-mesh execution of one
+    fused program across TPU shards), and
+  * :class:`ShardedEngine` — the host-level fan-out that owns one
+    ``repro.engine.Engine`` per shard and routes ``execute_many`` through
+    the same unified engine API, so every shard independently plans
+    host/device/Pallas execution and keeps its own frozen+delta device
+    image fresh.
 """
 
 from __future__ import annotations
@@ -32,7 +42,14 @@ from jax.sharding import PartitionSpec as P
 
 from .device_index import DeviceIndex, decode_blocks, query_step
 
-shard_map = jax.shard_map
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5: experimental home, check_vma spelled check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map_compat
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_compat(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
 
 
 def stack_images(images: list[DeviceIndex]) -> DeviceIndex:
@@ -107,8 +124,10 @@ def make_sharded_query_step(mesh, *, k: int = 10, max_blocks: int = 64,
         rank = jnp.int32(0)
         nshards = 1
         for ax in doc_axes:
-            rank = rank * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-            nshards *= jax.lax.axis_size(ax)
+            # mesh axis sizes are static; jax.lax.axis_size only exists on
+            # newer jax, so read them from the mesh closure instead
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+            nshards *= mesh.shape[ax]
         global_d = jnp.where(local_d > 0,
                              local_d + rank * jnp.int32(image.num_docs), 0)
         # fuse: all-gather the per-shard top-k and re-select
@@ -148,3 +167,89 @@ def sharded_input_specs(mesh, *, shard_blocks: int, B: int = 64,
     m = jax.ShapeDtypeStruct((qbatch, qterms), jnp.bool_)
     return (jax.ShapeDtypeStruct((nshards * shard_blocks, B), jnp.uint8),
             meta, meta, meta, meta, meta, q, m)
+
+
+# --------------------------------------------------------------------------
+# host-level shard fan-out through the unified engine
+# --------------------------------------------------------------------------
+
+
+class ShardedEngine:
+    """Document-partitioned fan-out of per-shard query engines.
+
+    Documents are assigned round-robin; each shard runs a full
+    ``repro.engine.Engine`` (its planner may independently pick host,
+    device, or Pallas execution, and its device image refreshes
+    incrementally).  Queries fan out to every shard and results fuse:
+
+      * boolean modes — per-shard docid lists are globalized and
+        concatenated (docid spaces are disjoint, no dedup needed);
+      * ranked modes — per-shard top-k lists merge by score.
+
+    Ranked scores use shard-local (N, f_t) statistics, the standard
+    document-partitioned IDF approximation; with round-robin assignment the
+    shard statistics are unbiased estimators of the global ones.  Boolean
+    results are exact.
+    """
+
+    def __init__(self, num_shards: int = 2, engine_factory=None,
+                 **engine_kwargs):
+        from ..engine import Engine
+        if engine_factory is None:
+            def engine_factory():
+                return Engine(**engine_kwargs)
+        self.engines = [engine_factory() for _ in range(num_shards)]
+        # global docid 0 is the usual 1-based padding slot
+        self._owner: list[tuple[int, int]] = [(0, 0)]  # g -> (shard, local)
+        self._to_global: list[list[int]] = [[0] for _ in self.engines]
+        self._next_shard = 0
+
+    @property
+    def num_docs(self) -> int:
+        return len(self._owner) - 1
+
+    def add_document(self, terms) -> int:
+        shard = self._next_shard
+        self._next_shard = (self._next_shard + 1) % len(self.engines)
+        local = self.engines[shard].add_document(terms)
+        g = len(self._owner)
+        self._owner.append((shard, local))
+        assert len(self._to_global[shard]) == local
+        self._to_global[shard].append(g)
+        return g
+
+    def collate_now(self) -> None:
+        for e in self.engines:
+            e.collate_now()
+
+    def execute(self, query):
+        return self.execute_many([query])[0]
+
+    def _globalize(self, shard: int, docids) -> "np.ndarray":
+        import numpy as np
+        lut = np.asarray(self._to_global[shard], dtype=np.int64)
+        return lut[np.asarray(docids, dtype=np.int64)]
+
+    def execute_many(self, queries):
+        """Fan a batch out to every shard engine and fuse per query."""
+        import numpy as np
+
+        from ..engine.types import QueryResult
+        per_shard = [e.execute_many(queries) for e in self.engines]
+        out = []
+        for qi, q in enumerate(queries):
+            shard_res = [per_shard[s][qi] for s in range(len(self.engines))]
+            gids = np.concatenate([self._globalize(s, r.docids)
+                                   for s, r in enumerate(shard_res)])
+            if q.mode in ("conjunctive", "phrase"):
+                out.append(QueryResult(np.sort(gids), None,
+                                       shard_res[0].backend, "sharded"))
+            else:
+                scores = np.concatenate([r.scores for r in shard_res])
+                order = np.argsort(-scores, kind="stable")[:q.k]
+                out.append(QueryResult(gids[order], scores[order],
+                                       shard_res[0].backend, "sharded"))
+        return out
+
+    def stats(self):
+        return [e.stats() for e in self.engines]

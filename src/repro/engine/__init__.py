@@ -1,0 +1,40 @@
+"""Unified query engine: one planner/executor over every backend.
+
+The paper's triple goal — streamlined ingest, small index, fast term-based
+querying — is served here through a single API:
+
+    eng = Engine(B=64, growth="const")
+    eng.add_document(["fast", "dynamic", "index"])
+    res = eng.execute(Query(mode="conjunctive", terms=("fast", "index")))
+    res.docids, res.scores, res.backend
+
+Three pluggable backends execute the same query semantics:
+
+  * :class:`~repro.engine.backends.HostBackend` — the paper-faithful
+    cursor/TAAT code in ``core/query.py`` (always available; the only
+    backend for word-level / phrase querying);
+  * :class:`~repro.engine.device_backend.DeviceBackend` — the jnp oracle
+    ``core/device_index.query_step`` over a frozen collated image plus an
+    incrementally refreshed :class:`~repro.core.device_index.DeltaIndex`,
+    so device queries see every ingested document without re-running
+    ``collate()`` (immediate access on the TPU path);
+  * :class:`~repro.engine.backends.PallasBackend` — the Pallas kernels
+    (``kernels/intersect``, ``kernels/topk_score``) discovered through
+    ``kernels/registry``.
+
+A :class:`~repro.engine.planner.Planner` selects the backend per batch from
+term statistics (f_t, chain lengths, batch size), with a forced-override
+knob (``Engine(force_backend=...)`` or ``Query(backend=...)``).
+"""
+
+from .backends import HostBackend, PallasBackend, UnsupportedQueryError
+from .device_backend import DeviceBackend
+from .engine import Engine
+from .planner import PlanDecision, Planner, PlannerConfig
+from .types import Query, QueryResult
+
+__all__ = [
+    "Engine", "Query", "QueryResult", "Planner", "PlannerConfig",
+    "PlanDecision", "HostBackend", "DeviceBackend", "PallasBackend",
+    "UnsupportedQueryError",
+]

@@ -1,0 +1,144 @@
+"""Host and Pallas execution backends.
+
+Both operate directly on the live :class:`~repro.core.index.DynamicIndex`
+(immediate access is inherited for free); the device backend, which needs an
+image refresh protocol, lives in :mod:`repro.engine.device_backend`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import query as hostq
+from ..kernels import registry
+from .types import Query, QueryResult
+
+
+class UnsupportedQueryError(ValueError):
+    """Raised when a forced backend cannot execute the query."""
+
+
+class Backend:
+    """Interface: ``execute_many`` over the engine's live state."""
+
+    name = "base"
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def execute_many(self, queries: list[Query]) -> list[QueryResult]:
+        return [self.execute(q) for q in queries]
+
+    def execute(self, query: Query) -> QueryResult:
+        raise NotImplementedError
+
+
+class HostBackend(Backend):
+    """The paper-faithful numpy path: DAAT cursors with seek_GEQ skipping
+    for boolean queries, vectorized TAAT for ranked modes (core/query.py)."""
+
+    name = "host"
+
+    def execute(self, query: Query) -> QueryResult:
+        eng = self.engine
+        idx = eng.index
+        if query.mode == "conjunctive":
+            d = hostq.conjunctive_query(idx, query.terms)
+            return QueryResult(d, None, self.name)
+        if query.mode == "ranked_tfidf":
+            d, s = hostq.ranked_disjunctive_taat(idx, query.terms, k=query.k)
+            return QueryResult(d, s, self.name)
+        if query.mode == "bm25":
+            d, s = hostq.ranked_bm25(idx, query.terms, eng.doclens_array(),
+                                     k=query.k)
+            return QueryResult(d, s, self.name)
+        if query.mode == "phrase":
+            if not idx.word_level:
+                raise UnsupportedQueryError(
+                    "phrase queries need a word-level index (§5.1)")
+            d = hostq.phrase_query(idx, query.terms)
+            return QueryResult(d, None, self.name)
+        raise UnsupportedQueryError(f"unknown mode {query.mode!r}")
+
+
+class PallasBackend(Backend):
+    """Route through the Pallas kernels via ``kernels/registry``.
+
+    Postings are decoded host-side (the live chains are host memory); the
+    compute-heavy comparisons run in the kernels: sorted-list membership for
+    conjunctive AND, masked-matmul score accumulation + top-k for ranked
+    modes.  ``interpret`` defaults to interpret-mode off only on real TPUs.
+    """
+
+    name = "pallas"
+
+    def __init__(self, engine, interpret: bool | None = None):
+        super().__init__(engine)
+        self.interpret = (registry.default_interpret()
+                          if interpret is None else interpret)
+
+    # -- mode implementations -------------------------------------------
+
+    def _conjunctive(self, query: Query) -> QueryResult:
+        import jax.numpy as jnp
+        idx = self.engine.index
+        if not query.terms:
+            return QueryResult(np.zeros(0, np.int64), None, self.name)
+        lists = []
+        for t in query.terms:
+            docids, _ = idx.postings(t)
+            if len(docids) == 0:
+                return QueryResult(np.zeros(0, np.int64), None, self.name)
+            lists.append(docids.astype(np.int32))
+        lists.sort(key=len)
+        a = jnp.asarray(lists[0])
+        flags = np.ones(len(lists[0]), bool)
+        spec = registry.get("intersect")
+        for other in lists[1:]:
+            hit = spec.fn(a, jnp.asarray(other), interpret=self.interpret)
+            flags &= np.asarray(hit)
+        return QueryResult(lists[0][flags].astype(np.int64), None, self.name)
+
+    def _ranked(self, query: Query) -> QueryResult:
+        import jax
+        import jax.numpy as jnp
+        eng = self.engine
+        idx = eng.index
+        N = idx.num_docs
+        all_d, all_w = [], []
+        doclens = eng.doclens_array() if query.mode == "bm25" else None
+        avg = (float(doclens[1:N + 1].mean()) if query.mode == "bm25" and N
+               else 0.0)
+        for t in query.terms:
+            docids, fs = idx.postings(t)
+            if len(docids) == 0:
+                continue
+            ft = len(docids)
+            if query.mode == "bm25":
+                w = hostq.bm25_weight(fs.astype(np.float64),
+                                      doclens[docids], avg, ft, N)
+            else:
+                w = hostq.tfidf_weight(fs, ft, N)
+            all_d.append(docids.astype(np.int32))
+            all_w.append(w.astype(np.float32))
+        if not all_d:
+            return QueryResult(np.zeros(0, np.int64),
+                               np.zeros(0, np.float64), self.name)
+        spec = registry.get("topk_score")
+        scores = spec.fn(jnp.concatenate([jnp.asarray(d) for d in all_d]),
+                         jnp.concatenate([jnp.asarray(w) for w in all_w]),
+                         n_docs=N + 1, interpret=self.interpret)
+        k = min(query.k, int(scores.shape[0]))
+        top_s, top_d = jax.lax.top_k(scores, k)
+        top_s, top_d = np.asarray(top_s), np.asarray(top_d)
+        keep = top_s > 0
+        return QueryResult(top_d[keep].astype(np.int64),
+                           top_s[keep].astype(np.float64), self.name)
+
+    def execute(self, query: Query) -> QueryResult:
+        if query.mode == "conjunctive":
+            return self._conjunctive(query)
+        if query.mode in ("ranked_tfidf", "bm25"):
+            return self._ranked(query)
+        raise UnsupportedQueryError(
+            f"PallasBackend does not implement mode {query.mode!r}")

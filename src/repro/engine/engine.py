@@ -1,0 +1,209 @@
+"""The Engine: one ingest+query front door over all backends.
+
+Owns the live :class:`~repro.core.index.DynamicIndex`, the document-length
+array (BM25 state the paper places outside the core index, §3.6), the
+term-id vocabulary shared with the device images, and the planner.  See the
+package docstring for the API sketch and ``ROADMAP.md`` for how later
+scaling PRs (async ingest, caching, multi-backend fusion) plug in here.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.collate import collate
+from ..core.index import DynamicIndex
+from ..core.query import TermStats
+from .backends import HostBackend, PallasBackend, UnsupportedQueryError
+from .device_backend import DeviceBackend
+from .planner import Planner, PlannerConfig
+from .types import EngineStats, Query, QueryResult
+
+
+class Engine:
+    """Planner/executor over host, device-oracle, and Pallas backends.
+
+    Parameters
+    ----------
+    B, growth, F, word_level:
+        forwarded to :class:`DynamicIndex` (``index`` may be passed instead
+        to adopt an existing one — it must not be shared with other writers).
+    planner / force_backend:
+        routing configuration; ``force_backend`` pins every query.
+    decode_fn:
+        optional Pallas decode kernel for the device backend
+        (``kernels.dvbyte_decode.ops.as_decode_fn()``).
+    interpret:
+        Pallas interpret mode for the kernel backend (default: auto —
+        interpret everywhere but real TPUs).
+    auto_collate_delta_frac:
+        if set, a device refresh that finds the delta larger than this
+        fraction of the frozen image triggers a full collation first —
+        bounding delta size (and device query cost) without ever collating
+        on the query path for small deltas.
+    """
+
+    def __init__(self, B: int = 64, growth: str = "const",
+                 F: int | None = None, word_level: bool = False,
+                 index: DynamicIndex | None = None,
+                 planner: PlannerConfig | None = None,
+                 force_backend: str | None = None,
+                 decode_fn=None, interpret: bool | None = None,
+                 auto_collate_delta_frac: float | None = None):
+        self.index = index if index is not None else DynamicIndex(
+            B=B, growth=growth, F=F, word_level=word_level)
+        self.planner = Planner(planner, force_backend)
+        self.auto_collate_delta_frac = auto_collate_delta_frac
+        self.version = 0                  # bumps per ingested document
+        self.vocab: list[bytes] = []      # tid -> term bytes
+        self._tid: dict[bytes, int] = {}
+        self._fts: list[int] = []         # tid -> f_t, maintained at ingest
+        self._doclens: list[int] = [0]    # 1-indexed via position-0 pad
+        self.stats_counters = EngineStats()
+        self.backends = {
+            "host": HostBackend(self),
+            "device": DeviceBackend(self, decode_fn=decode_fn),
+            "pallas": PallasBackend(self, interpret=interpret),
+        }
+        if index is not None:
+            self._adopt_existing()
+
+    def _adopt_existing(self) -> None:
+        """Register terms/doclens of a pre-built index (doclens are
+        reconstructed as Σ f per doc — exact for doc-level indexes)."""
+        dl = np.zeros(self.index.num_docs + 1, np.int64)
+        for term, _h in self.index.terms():
+            tid = self._intern(term)
+            d, f = self.index.postings(term)
+            self._fts[tid] = len(d)
+            np.add.at(dl, d, f if not self.index.word_level else 1)
+        self._doclens = dl.tolist()
+        self.version += 1
+
+    # ------------------------------------------------------------------
+    # vocabulary / statistics
+    # ------------------------------------------------------------------
+
+    def _intern(self, tb: bytes) -> int:
+        tid = self._tid.get(tb)
+        if tid is None:
+            tid = len(self.vocab)
+            self._tid[tb] = tid
+            self.vocab.append(tb)
+            self._fts.append(0)
+        return tid
+
+    def term_id(self, term) -> int | None:
+        tb = term.encode() if isinstance(term, str) else term
+        return self._tid.get(tb)
+
+    def global_fts(self) -> np.ndarray:
+        """Current f_t per term id (device images rebase stats with this).
+
+        Maintained incrementally at ingest, so an image refresh never walks
+        the vocabulary through the store."""
+        return np.asarray(self._fts, dtype=np.int64)
+
+    def doclens_array(self) -> np.ndarray:
+        return np.asarray(self._doclens, dtype=np.float64)
+
+    @property
+    def device_capable(self) -> bool:
+        return self.index.store.const_mode and not self.index.word_level
+
+    @property
+    def pallas_capable(self) -> bool:
+        # kernels decode postings host-side, so any growth policy works;
+        # word-level lists (w-gap payloads, duplicate docids) do not fit
+        return not self.index.word_level
+
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
+
+    def add_document(self, terms) -> int:
+        """Ingest one document; it is queryable on every backend the moment
+        this returns (device backends refresh their delta lazily)."""
+        d = self.index.add_document(terms)
+        tbs = [t.encode() if isinstance(t, str) else t for t in terms]
+        if self.index.word_level:
+            for tb in tbs:  # §5.1: one posting (and one f_t tick) per occurrence
+                self._fts[self._intern(tb)] += 1
+        else:
+            for tb in dict.fromkeys(tbs):  # dedupe, first-occurrence order
+                self._fts[self._intern(tb)] += 1
+        self._doclens.append(len(terms))
+        self.version += 1
+        return d
+
+    def collate_now(self) -> None:
+        """Full collation (§5.5): stop-the-world chain compaction, then the
+        device backend adopts the result as its frozen image and the delta
+        rebases to empty.  Queries never require this — the delta keeps the
+        device backend current — but a periodic collation keeps the delta
+        (and host cache locality) small."""
+        self.index = collate(self.index)
+        self.stats_counters.collations += 1
+        if self.device_capable:
+            self.backends["device"].freeze()
+
+    def _maybe_auto_collate(self) -> None:
+        frac = self.auto_collate_delta_frac
+        if frac is None:
+            return
+        dev: DeviceBackend = self.backends["device"]
+        total = max(1, self.index.store.nblocks)
+        if dev.delta_blocks > frac * total:
+            self.collate_now()
+
+    # ------------------------------------------------------------------
+    # query execution
+    # ------------------------------------------------------------------
+
+    def execute(self, query: Query) -> QueryResult:
+        return self.execute_many([query])[0]
+
+    def execute_many(self, queries: list[Query]) -> list[QueryResult]:
+        """Plan and run a batch; results align with ``queries``."""
+        if not queries:
+            return []
+        self._maybe_auto_collate()
+        plans = []
+        for q in queries:
+            # planning reads only the engine's O(1) f_t counters — never the
+            # store (term_stats' chain walk is for offline introspection)
+            stats = [TermStats(self._fts[tid], 0)
+                     if (tid := self.term_id(t)) is not None else TermStats()
+                     for t in q.terms]
+            plans.append(self.planner.plan(
+                q, len(queries), stats, device_capable=self.device_capable,
+                pallas_capable=self.pallas_capable))
+        out: list[QueryResult | None] = [None] * len(queries)
+        by_backend: dict[str, list[int]] = {}
+        for i, p in enumerate(plans):
+            by_backend.setdefault(p.backend, []).append(i)
+        for name, idxs in by_backend.items():
+            backend = self.backends[name]
+            res = backend.execute_many([queries[i] for i in idxs])
+            for i, r in zip(idxs, res):
+                r.reason = plans[i].reason
+                out[i] = r
+        self.stats_counters.queries += len(queries)
+        for p in plans:
+            bb = self.stats_counters.by_backend
+            bb[p.backend] = bb.get(p.backend, 0) + 1
+        return out  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    def stats(self) -> EngineStats:
+        s = self.stats_counters
+        s.num_docs = self.index.num_docs
+        s.num_postings = self.index.num_postings
+        s.vocab_size = len(self.vocab)
+        return s
+
+
+__all__ = ["Engine", "Query", "QueryResult", "UnsupportedQueryError"]

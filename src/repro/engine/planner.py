@@ -1,0 +1,91 @@
+"""Backend selection: route each query batch by term statistics.
+
+The planner is deliberately a pure function of cheap observables —
+per-term f_t and chain length (both O(1) head-block reads), query batch
+size, and index shape (growth policy, word level) — so planning cost never
+rivals execution cost.  Routing rules, in priority order:
+
+1. a forced override (``Query.backend`` or ``Engine(force_backend=...)``)
+   wins unconditionally and raises if the backend can't run the query;
+2. phrase queries and word-level indexes run on the host (the only backend
+   modelling word positions); non-Const growth additionally rules out the
+   device image (device snapshots need B-addressable blocks) but NOT the
+   Pallas kernels, which decode postings host-side;
+3. batches of ``device_min_batch`` or more queries go to the device image:
+   batched fixed-shape execution amortizes the dispatch and the gather
+   touches every query's chains in one fused program;
+4. single/small queries whose candidate volume (min f_t for conjunctive —
+   the driver of DAAT cost — or Σ f_t for ranked) exceeds
+   ``pallas_min_postings`` go to the Pallas kernels;
+5. everything else stays on the host, whose seek_GEQ skipping beats a
+   device round-trip on short chains.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+from .types import Query, TermStats
+
+
+@dataclass(frozen=True)
+class PlannerConfig:
+    """Thresholds for the routing rules (see module docstring)."""
+
+    device_min_batch: int = 4       # batch size at which the device image wins
+    pallas_min_postings: int = 2048  # candidate volume at which kernels win
+    allow_device: bool = True
+    allow_pallas: bool = True
+
+
+class PlanDecision(NamedTuple):
+    backend: str
+    reason: str
+
+
+class Planner:
+    def __init__(self, config: PlannerConfig | None = None,
+                 force_backend: str | None = None):
+        self.config = config or PlannerConfig()
+        self.force_backend = force_backend
+
+    def plan(self, query: Query, batch_size: int, stats: list[TermStats],
+             *, device_capable: bool,
+             pallas_capable: bool = True) -> PlanDecision:
+        """Pick a backend for ``query`` arriving in a batch of ``batch_size``.
+
+        ``stats`` aligns with ``query.terms``; ``device_capable`` reports
+        whether the index layout supports device images (Const-mode,
+        doc-level), ``pallas_capable`` whether the kernels apply (doc-level
+        — Pallas decodes postings host-side, so variable-block growth is
+        fine, but word-level lists carry w-gap payloads and duplicate
+        docids the kernels do not model).
+        """
+        cfg = self.config
+        forced = query.backend or self.force_backend
+        if forced is not None:
+            unsupported = (query.mode == "phrase" or
+                           (forced == "device" and not device_capable) or
+                           (forced == "pallas" and not pallas_capable))
+            if forced in ("device", "pallas") and unsupported:
+                raise ValueError(
+                    f"backend {forced!r} forced, but {query.mode!r} queries "
+                    "on this index layout require the host backend")
+            return PlanDecision(forced, "forced override")
+        if query.mode == "phrase":
+            return PlanDecision("host", "phrase requires word positions")
+        if (cfg.allow_device and device_capable
+                and batch_size >= cfg.device_min_batch):
+            return PlanDecision(
+                "device", f"batch of {batch_size} amortizes device dispatch")
+        fts = [s.ft for s in stats if s.ft > 0]
+        if not fts:
+            return PlanDecision("host", "no term statistics (empty terms)")
+        volume = min(fts) if query.mode == "conjunctive" else sum(fts)
+        if (cfg.allow_pallas and pallas_capable
+                and volume >= cfg.pallas_min_postings):
+            return PlanDecision(
+                "pallas", f"candidate volume {volume} favours kernels")
+        return PlanDecision(
+            "host", f"candidate volume {volume} favours cursor skipping")

@@ -1,0 +1,71 @@
+"""Engine query/result types shared by the planner and every backend."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+#: Query modes every backend must agree on (identical results up to float
+#: tolerance — enforced by the differential test matrix in tests/test_engine.py).
+MODES = ("conjunctive", "ranked_tfidf", "bm25", "phrase")
+
+#: Backends a query may force via ``Query.backend``.
+BACKENDS = ("host", "device", "pallas")
+
+
+@dataclass(frozen=True)
+class Query:
+    """One term-based query.
+
+    ``mode`` is one of :data:`MODES`; ``k`` bounds ranked result size
+    (ignored for boolean modes); ``backend`` forces a specific backend for
+    this query, overriding the planner (raises if that backend cannot run
+    the query, rather than silently falling back).
+    """
+
+    terms: tuple[str, ...]
+    mode: str = "conjunctive"
+    k: int = 10
+    backend: str | None = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown query mode {self.mode!r}; "
+                             f"expected one of {MODES}")
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {BACKENDS}")
+        object.__setattr__(self, "terms", tuple(self.terms))
+
+
+@dataclass
+class QueryResult:
+    """Backend-independent result: docids ascending for boolean modes,
+    descending-score order for ranked modes (``scores`` is None for boolean
+    modes).  ``backend``/``reason`` record the planner's routing decision for
+    introspection and benchmarks."""
+
+    docids: np.ndarray
+    scores: np.ndarray | None = None
+    backend: str = "host"
+    reason: str = ""
+
+    def __len__(self) -> int:
+        return len(self.docids)
+
+
+from ..core.query import TermStats  # noqa: E402  (re-export for planner)
+
+
+@dataclass
+class EngineStats:
+    """Counters surfaced by ``Engine.stats()`` (serving observability)."""
+
+    num_docs: int = 0
+    num_postings: int = 0
+    vocab_size: int = 0
+    queries: int = 0
+    collations: int = 0
+    delta_refreshes: int = 0
+    by_backend: dict = field(default_factory=dict)

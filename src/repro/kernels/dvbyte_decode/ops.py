@@ -31,3 +31,13 @@ def as_decode_fn(F: int = 4, tile: int = DEFAULT_TILE,
                                     interpret=interpret)
 
     return fn
+
+
+from .. import registry  # noqa: E402
+
+registry.register(registry.KernelSpec(
+    name="dvbyte_decode", fn=dvbyte_decode_blocks,
+    modes=("conjunctive", "ranked_tfidf", "bm25"),
+    description="VMEM-tiled Double-VByte block decode; plug into "
+                "device_index.query_step via decode_fn",
+    extras={"as_decode_fn": as_decode_fn}))

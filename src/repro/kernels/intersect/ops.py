@@ -6,6 +6,7 @@ from functools import partial
 
 import jax
 
+from .. import registry
 from .kernel import DEFAULT_TILE, intersect_kernel
 
 
@@ -15,3 +16,10 @@ def intersect_sorted(a, b, tile_a: int = DEFAULT_TILE,
     """Membership flags of sorted int32 list ``a`` in sorted list ``b``."""
     return intersect_kernel(a, b, tile_a=tile_a, tile_b=tile_b,
                             interpret=interpret)
+
+
+registry.register(registry.KernelSpec(
+    name="intersect", fn=intersect_sorted, modes=("conjunctive",),
+    description="tiled sorted-list membership with range-disjoint tile skip "
+                "(the seek_GEQ block bypass on TPU)",
+    extras={"pad": int(jax.numpy.iinfo(jax.numpy.int32).max)}))

@@ -6,6 +6,7 @@ from functools import partial
 
 import jax
 
+from .. import registry
 from .kernel import TILE_D, TILE_N, TILE_Q, retrieval_dot_kernel
 
 
@@ -15,3 +16,9 @@ def candidate_scores(q, cand, tile_q: int = TILE_Q, tile_n: int = TILE_N,
     """Two-tower scores (q, n) = q @ cand^T (f32 accumulation)."""
     return retrieval_dot_kernel(q, cand, tile_q=tile_q, tile_n=tile_n,
                                 tile_d=tile_d, interpret=interpret)
+
+
+registry.register(registry.KernelSpec(
+    name="retrieval_dot", fn=candidate_scores, modes=(),
+    description="dense two-tower candidate scoring; outside the term-query "
+                "path (hybrid reranking hook)"))

@@ -6,6 +6,7 @@ from functools import partial
 
 import jax
 
+from .. import registry
 from .kernel import DEFAULT_TILE_M, DEFAULT_TILE_N, score_kernel
 
 
@@ -16,3 +17,10 @@ def score_accumulate(docids, weights, n_docs: int,
     """Dense TF×IDF score vector from decoded postings (docid 0 = padding)."""
     return score_kernel(docids, weights, n_docs, tile_m=tile_m,
                         tile_n=tile_n, interpret=interpret)
+
+
+registry.register(registry.KernelSpec(
+    name="topk_score", fn=score_accumulate,
+    modes=("ranked_tfidf", "bm25"),
+    description="masked-matmul scatter-add of posting weights into the dense "
+                "docid score vector (MXU-shaped accumulation)"))

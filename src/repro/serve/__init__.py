@@ -1,1 +1,2 @@
 from .kv_cache import PagedKVCache, triangle_page_schedule  # noqa: F401
+from .query_service import QueryService, Ticket  # noqa: F401

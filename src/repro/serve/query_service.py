@@ -1,0 +1,118 @@
+"""Serving front door: request batching + mixed ingest/query streams.
+
+Production traffic (ROADMAP north star) arrives as an interleaved stream of
+document ingests and queries.  The service keeps the paper's immediate-access
+contract — a query sees every document ingested before it — while batching
+adjacent queries so the engine planner can route them to the batched device
+path (``device_min_batch``): the classic serving trade of a tiny queueing
+delay for much higher throughput.
+
+Synchronous core, deliberately: one writer per shard is the paper's (and
+Asadi & Lin's) concurrency model, and a thread-safe wrapper can wrap
+``submit``/``flush`` without touching engine internals.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from ..engine.types import Query, QueryResult
+
+
+@dataclass
+class Ticket:
+    """A pending query; ``result`` is filled at flush time."""
+
+    query: Query
+    result: QueryResult | None = None
+    submitted_at: float = field(default_factory=time.perf_counter)
+    latency_s: float | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class QueryService:
+    """Batching executor over an :class:`~repro.engine.Engine` (or a
+    :class:`~repro.core.sharded_index.ShardedEngine` — anything with
+    ``add_document``/``execute_many``)."""
+
+    def __init__(self, engine, max_batch: int = 32):
+        self.engine = engine
+        self.max_batch = max_batch
+        self._pending: list[Ticket] = []
+        self.query_latencies: list[float] = []
+        self.ingest_latencies: list[float] = []
+
+    # -- ingest ---------------------------------------------------------
+
+    def ingest(self, terms) -> int:
+        """Ingest one document.  Pending queries were submitted BEFORE this
+        document, so they are NOT flushed first — immediate access only
+        requires a query to see documents ingested before its submission."""
+        t0 = time.perf_counter()
+        d = self.engine.add_document(terms)
+        self.ingest_latencies.append(time.perf_counter() - t0)
+        return d
+
+    # -- querying -------------------------------------------------------
+
+    def submit(self, query: Query) -> Ticket:
+        """Queue a query; auto-flushes when the batch fills."""
+        t = Ticket(query)
+        self._pending.append(t)
+        if len(self._pending) >= self.max_batch:
+            self.flush()
+        return t
+
+    def flush(self) -> list[Ticket]:
+        """Execute every pending query as one planned batch."""
+        batch, self._pending = self._pending, []
+        if not batch:
+            return []
+        results = self.engine.execute_many([t.query for t in batch])
+        now = time.perf_counter()
+        for t, r in zip(batch, results):
+            t.result = r
+            t.latency_s = now - t.submitted_at
+            self.query_latencies.append(t.latency_s)
+        return batch
+
+    def query(self, query: Query) -> QueryResult:
+        """Synchronous single query (flushes anything already queued so
+        ordering against prior submissions is preserved)."""
+        t = self.submit(query)
+        self.flush()
+        assert t.result is not None
+        return t.result
+
+    # -- streams --------------------------------------------------------
+
+    def run_stream(self, ops) -> list[Ticket]:
+        """Drive a mixed stream of ("doc", terms) / ("query", Query) ops;
+        returns every query ticket in submission order."""
+        tickets = []
+        for kind, payload in ops:
+            if kind == "doc":
+                self.ingest(payload)
+            elif kind == "query":
+                tickets.append(self.submit(payload))
+            else:
+                raise ValueError(f"unknown op {kind!r}")
+        self.flush()
+        return tickets
+
+    # -- observability ---------------------------------------------------
+
+    def latency_summary(self) -> dict:
+        import numpy as np
+        out = {}
+        for name, xs in (("query", self.query_latencies),
+                         ("ingest", self.ingest_latencies)):
+            if xs:
+                a = np.asarray(xs)
+                out[name] = {"n": len(a), "mean_us": float(a.mean() * 1e6),
+                             "p99_us": float(np.quantile(a, 0.99) * 1e6)}
+        return out
