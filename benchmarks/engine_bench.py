@@ -13,7 +13,15 @@ programs first):
 plus the **delta-refresh** scenario: after a full collation, ingest keeps
 running and device queries are interleaved — we time the incremental
 ``DeltaIndex`` refresh against a full ``collate()`` + image rebuild, and
-record the fragmentation the delta has accumulated (``collation_stats``).
+record the fragmentation the delta has accumulated (``collation_stats``);
+
+plus the **tiered** mode: the engine runs with the static-tier lifecycle
+enabled, the ``tiered`` backend joins the comparison (frozen prefix served
+from the compressed StaticIndex), the static tier's bytes-per-posting is
+reported next to the dynamic index's, and a **freeze-under-load** scenario
+ingests and queries while a background freeze completes — confirming a zero
+query-availability gap (every query during the freeze answered) and
+recording the worst query latency observed while the freeze thread ran.
 Results land in ``BENCH_engine.json``.
 """
 
@@ -48,18 +56,22 @@ def main() -> None:
     from benchmarks.common import corpus
     from repro.core.collate import collation_stats, collate
     from repro.core.device_index import build_device_image
+    from repro.core.lifecycle import FreezePolicy
+    from repro.core.static_index import StaticIndex
     from repro.engine import Engine, Query
 
     docs = corpus(args.docs)
     rng = np.random.default_rng(17)
     freeze_at = int(args.docs * 0.7)
 
-    eng = Engine(B=64, growth="const")
+    eng = Engine(B=64, growth="const", tier_policy=FreezePolicy())
     t0 = time.perf_counter()
     for d in docs[:freeze_at]:
         eng.add_document(d)
     ingest_s = time.perf_counter() - t0
-    eng.collate_now()
+    # the lifecycle freeze collates (device freeze point) AND publishes the
+    # static tier the tiered backend serves from
+    eng.lifecycle.freeze(blocking=True)
     for d in docs[freeze_at:]:
         eng.add_document(d)
 
@@ -80,7 +92,7 @@ def main() -> None:
     for mode, nterms in (("conjunctive", 2), ("ranked_tfidf", 3),
                          ("bm25", 3)):
         batch = make_batch(mode, nterms)
-        for backend in ("host", "device", "pallas"):
+        for backend in ("host", "device", "pallas", "tiered"):
             forced = [Query(terms=q.terms, mode=q.mode, k=q.k,
                             backend=backend) for q in batch]
             secs = _timed(lambda: eng.execute_many(forced))
@@ -117,6 +129,44 @@ def main() -> None:
                                     backend="device") for q in qs])
     concurrent_s = time.perf_counter() - t0
 
+    # ---- tiered lifecycle: static-tier compression + freeze under load ----
+    # compression: the published tier vs the dynamic index vs offline interp
+    tier = eng.static_tier()
+    interp_bpp = StaticIndex.freeze(collate(eng.index), "interp") \
+        .bytes_per_posting()
+    # freeze-under-load: a background freeze runs while ingest and tiered
+    # queries continue.  "Zero availability gap" is measured falsifiably:
+    # a query counts as a gap if it raises OR disagrees with the host
+    # backend on the same engine state (correctness-checked availability).
+    load_docs = corpus(args.docs + 400)[args.docs + 240:]
+    qs_tiered = [Query(terms=q.terms, mode=q.mode, k=q.k, backend="tiered")
+                 for q in make_batch("ranked_tfidf", 2)[:8]]
+    qs_host = [Query(terms=q.terms, mode=q.mode, k=q.k, backend="host")
+               for q in qs_tiered]
+    eng.execute_many(qs_tiered)  # warm
+    epoch_before = eng.lifecycle.epoch
+    if not eng.lifecycle.freeze(blocking=False):
+        raise RuntimeError("background freeze failed to start")
+    lat_during: list[float] = []
+    issued = answered = 0
+    i = 0
+    while eng.lifecycle.in_flight:
+        eng.add_document(load_docs[i % len(load_docs)])
+        issued += len(qs_tiered)
+        t0 = time.perf_counter()
+        try:
+            res = eng.execute_many(qs_tiered)
+        except Exception:
+            i += 1
+            continue
+        lat_during.append(time.perf_counter() - t0)
+        exp = eng.execute_many(qs_host)
+        answered += sum(r.docids.tolist() == e.docids.tolist()
+                        for r, e in zip(res, exp))
+        i += 1
+    eng.lifecycle.wait()
+    tier_after = eng.static_tier()
+
     payload = {
         "config": {"docs": eng.index.num_docs,
                    "postings": eng.index.num_postings,
@@ -132,12 +182,35 @@ def main() -> None:
             "speedup": full_rebuild_s / max(delta_refresh_s, 1e-9),
             "concurrent_ingest_query_s": concurrent_s,
         },
+        "tiered": {
+            "static_bytes_per_posting": tier.index.bytes_per_posting(),
+            "static_bytes_per_posting_interp": interp_bpp,
+            "dynamic_bytes_per_posting": eng.index.bytes_per_posting(),
+            "tier_docs": tier.num_docs,
+            "tier_postings": tier.num_postings,
+            "freeze_epochs": eng.lifecycle.freezes,
+            "background_freeze_s": eng.lifecycle.last_freeze_s,
+            "epoch_swapped": tier_after.epoch == epoch_before + 1,
+            "queries_during_freeze": issued,
+            "queries_answered_during_freeze": answered,
+            "availability_gap_queries": issued - answered,
+            "batch_size_during_freeze": len(qs_tiered),
+            "max_batch_ms_during_freeze":
+                1e3 * max(lat_during) if lat_during else 0.0,
+        },
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"\ndelta refresh {payload['delta']['incremental_refresh_ms']:.1f} ms"
           f" vs full rebuild {payload['delta']['full_collate_rebuild_ms']:.1f}"
-          f" ms ({payload['delta']['speedup']:.1f}x)  -> {args.out}")
+          f" ms ({payload['delta']['speedup']:.1f}x)")
+    tp = payload["tiered"]
+    print(f"static tier {tp['static_bytes_per_posting']:.2f} B/posting "
+          f"(interp {tp['static_bytes_per_posting_interp']:.2f}) vs dynamic "
+          f"{tp['dynamic_bytes_per_posting']:.2f}; freeze "
+          f"{tp['background_freeze_s']:.2f}s in background, "
+          f"{tp['queries_answered_during_freeze']} queries answered during "
+          f"it (gap {tp['availability_gap_queries']})  -> {args.out}")
 
 
 if __name__ == "__main__":

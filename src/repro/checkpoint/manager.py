@@ -14,7 +14,7 @@ Design points for thousand-node deployments, realized at library scale:
     a multi-host deployment would write per-process shards keyed by
     ``process_index``, same layout);
   * **retention** — keep the newest ``keep`` checkpoints, never deleting the
-    newest complete one;
+    newest complete one (``keep=0`` degenerates to "newest only");
   * **restore** — ``latest_step()`` + ``restore(step)`` rebuilds the exact
     pytree; the trainer resumes from (step+1) and the deterministic data
     pipeline replays the right batch (see repro.data.lm).
@@ -33,10 +33,13 @@ import numpy as np
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
+        if keep < 0:
+            raise ValueError(f"keep must be >= 0, got {keep}")
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._seq = 0  # per-save staging-dir discriminator
 
     # -- save -------------------------------------------------------------
 
@@ -47,9 +50,16 @@ class CheckpointManager:
                 "leaves": [{"shape": list(a.shape), "dtype": str(a.dtype)}
                            for a in host],
                 "step": step}
+        # An in-flight async save must finish before the next save stages:
+        # otherwise two threads race in the staging area and the publish
+        # order (newest wins) is undefined.  The staging dir is additionally
+        # unique per save within this process; cross-process leftovers are
+        # swept by _gc at the next publish.
+        self.wait()
+        self._seq += 1
+        tmp = os.path.join(self.dir, f".tmp-{step}-{self._seq}")
 
         def work():
-            tmp = os.path.join(self.dir, f".tmp-{step}")
             final = os.path.join(self.dir, f"step-{step:010d}")
             if os.path.exists(tmp):
                 shutil.rmtree(tmp)
@@ -66,7 +76,6 @@ class CheckpointManager:
         if blocking:
             work()
         else:
-            self.wait()
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
 
@@ -76,10 +85,21 @@ class CheckpointManager:
             self._thread = None
 
     def _gc(self) -> None:
+        # the newest complete checkpoint is never deleted, even at keep=0
         steps = self.all_steps()
-        for s in steps[:-self.keep]:
+        drop = steps[:-self.keep] if self.keep > 0 else steps[:-1]
+        for s in drop:
             shutil.rmtree(os.path.join(self.dir, f"step-{s:010d}"),
                           ignore_errors=True)
+        # sweep staging dirs orphaned by a crashed predecessor.  Running
+        # here — we just published, so we are the directory's single writer
+        # and saves are serialized through wait(), leaving no live staging
+        # of our own — rather than in __init__ keeps restore-only instances
+        # from ever deleting an active writer's in-flight staging dir.
+        for name in os.listdir(self.dir):
+            if name.startswith(".tmp-"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # -- restore ----------------------------------------------------------
 

@@ -1,3 +1,5 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from .lifecycle import FreezeManager, FreezePolicy, StaticTier  # noqa: F401
+from .static_index import StaticIndex, StaticPostingsCursor  # noqa: F401

@@ -167,6 +167,25 @@ class BlockStore:
     def _slots_for(self, nbytes: int) -> int:
         return (nbytes + self.B - 1) // self.B
 
+    def clone(self) -> "BlockStore":
+        """Deep snapshot: a private copy of the index array.  The lifecycle's
+        background freeze thread reads the clone while ingest keeps writing
+        into the original — they share no mutable state (the growth policy is
+        stateless and safely shared)."""
+        out = BlockStore.__new__(BlockStore)
+        out.B = self.B
+        out.policy = self.policy
+        out.const_mode = self.const_mode
+        out.F = self.F
+        out.word_level = self.word_level
+        out.I = self.I[: self.nblocks * self.B].copy()
+        out.nblocks = self.nblocks
+        out.nx_width = self.nx_width
+        out.z_width = self.z_width
+        out.lastw_width = self.lastw_width
+        out.head_fixed = self.head_fixed
+        return out
+
     def _ensure_capacity(self, extra_slots: int) -> None:
         need = (self.nblocks + extra_slots) * self.B
         if need > len(self.I):

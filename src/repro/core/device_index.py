@@ -537,11 +537,13 @@ def query_step(image: DeviceIndex, qterms: jnp.ndarray, qmask: jnp.ndarray,
             prev_end >= 0,
             jnp.take_along_axis(csum, jnp.maximum(prev_end, 0), axis=1), 0.0)
         run_score = jnp.where(is_end & (d_s > 0), csum - prev_csum, -jnp.inf)
-        top_s, pos_k = jax.lax.top_k(run_score, k)
+        # k may exceed the posting-slot count (top_k requires k <= minor
+        # dim); clamping is exact — distinct scored docids never exceed P
+        top_s, pos_k = jax.lax.top_k(run_score, min(k, P))
         top_d = jnp.take_along_axis(d_s, pos_k, axis=1)
         return top_d.astype(jnp.int32), top_s
     scores = jnp.zeros((Q, N + 1), jnp.float32)
     scores = jax.vmap(lambda s, dd, ww: s.at[dd].add(ww))(scores, flat_docs, w)
     scores = scores.at[:, 0].set(-jnp.inf)
-    top_s, top_d = jax.lax.top_k(scores, k)
+    top_s, top_d = jax.lax.top_k(scores, min(k, N + 1))  # clamp: k <= cols
     return top_d.astype(jnp.int32), top_s

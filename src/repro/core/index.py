@@ -147,6 +147,26 @@ class DynamicIndex:
                 self.num_postings += 1
         return d
 
+    def clone(self) -> "DynamicIndex":
+        """Deep snapshot sharing no mutable state with the original.
+
+        One memcpy of the block array plus the hash array — cheap relative
+        to any decode pass.  The lifecycle freeze hands the clone to a
+        background thread for static conversion while ingest continues into
+        the original (single-writer model preserved: the clone has no
+        writer at all)."""
+        out = DynamicIndex.__new__(DynamicIndex)
+        out.store = self.store.clone()
+        out.word_level = self.word_level
+        out.F = self.F
+        out.hash = self.hash.copy()
+        out.vocab_size = self.vocab_size
+        out.num_docs = self.num_docs
+        out.num_postings = self.num_postings
+        out.num_words = self.num_words
+        out._cache = {}
+        return out
+
     # ------------------------------------------------------------------
     # read access
     # ------------------------------------------------------------------

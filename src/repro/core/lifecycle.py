@@ -1,0 +1,179 @@
+"""Tiered index lifecycle: dynamic → delta → static (Figure 2, closed loop).
+
+The paper's triple goal includes "fast conversion of the dynamic index to a
+'normal' static compressed inverted index", but a conversion nobody queries
+is just a benchmark.  This module turns the :class:`~repro.core.static_index.
+StaticIndex` into a live serving tier, following the production shape of
+Asadi & Lin (Fast, Incremental Inverted Indexing, 2013): a write-optimized
+in-memory segment continuously frozen into compressed read-optimized
+segments, with queries spanning both — and, per Vigna's Quasi-Succinct
+Indices, the frozen tier kept in its most compact codec.
+
+Lifecycle of one freeze (driven by :class:`FreezeManager`):
+
+  1. **policy trigger** — after an ingest, ``maybe_freeze`` compares the
+     un-frozen suffix (docs/postings past the current tier horizon) against
+     the :class:`FreezePolicy` thresholds;
+  2. **snapshot** (caller thread, cheap) — ``Engine.collate_now()`` runs the
+     §5.5 collation (which also refreezes the device image + delta
+     baseline, so all tiers share one freeze point), then the collated
+     index is ``clone()``-d: one memcpy, after which the background thread
+     shares no mutable state with ingest;
+  3. **convert** (background thread, expensive) — the clone is encoded into
+     a :class:`StaticIndex` (bp128 or interp) while ingest and queries
+     continue against the live index and the *previous* tier: there is no
+     moment at which any document is unqueryable (zero availability gap);
+  4. **swap** (atomic) — the finished tier is published as a single
+     reference assignment of an immutable :class:`StaticTier`; the epoch
+     counter bumps, invalidating the serving layer's query-result cache.
+
+Exactness across tiers: docids are ordinal and each document's postings are
+written before the next document starts, so docs ``<= tier.num_docs`` live
+wholly in the static tier and later docs wholly in the dynamic suffix — the
+same disjoint-docid-range argument :class:`~repro.core.device_index.
+DeltaBaseline` makes for the device path.  The engine's tiered backend
+(``engine.backends.TieredBackend``) merges the two ranges and rebases
+idf/BM25 statistics to the live collection, so results are byte-identical
+to a host-backend evaluation of the full dynamic index.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+from .static_index import StaticIndex
+
+
+@dataclass(frozen=True)
+class FreezePolicy:
+    """When (and how) to freeze the dynamic prefix into the static tier.
+
+    ``every_docs`` / ``every_postings``: freeze once the un-frozen suffix
+    reaches that many documents / postings (either trigger suffices; None
+    disables that trigger).  ``codec`` picks the static codec; ``background``
+    runs the conversion on a freeze thread (the production mode — ``False``
+    makes every freeze synchronous, which tests use for determinism).
+    """
+
+    every_docs: int | None = None
+    every_postings: int | None = None
+    codec: str = "bp128"
+    background: bool = True
+
+
+@dataclass(frozen=True)
+class StaticTier:
+    """An immutable published tier: the compressed image, its docid horizon
+    (every docid <= num_docs is served from it), and the freeze epoch."""
+
+    index: StaticIndex
+    num_docs: int
+    num_postings: int
+    epoch: int
+
+
+class FreezeManager:
+    """Owns the static tier of one engine: policy, background freeze, swap.
+
+    Thread model: ``maybe_freeze``/``freeze`` run on the engine's single
+    writer thread; the conversion runs on at most one background thread at a
+    time, touching only its private clone; ``tier`` is swapped by a single
+    reference assignment (readers grab the reference once per query, so a
+    mid-query swap is invisible).  A freeze request while one is in flight
+    is a no-op — the next ``maybe_freeze`` re-evaluates the policy against
+    the new horizon.
+    """
+
+    def __init__(self, engine, policy: FreezePolicy | None = None):
+        self.engine = engine
+        self.policy = policy or FreezePolicy()
+        self.tier: StaticTier | None = None
+        self.epoch = 0
+        self.freezes = 0
+        self.last_freeze_s: float | None = None
+        self._thread: threading.Thread | None = None
+
+    # -- observability ----------------------------------------------------
+
+    @property
+    def in_flight(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def wait(self) -> None:
+        """Join an in-flight background conversion (tests / shutdown)."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def suffix_size(self) -> tuple[int, int]:
+        """(docs, postings) ingested past the current tier horizon."""
+        idx = self.engine.index
+        if self.tier is None:
+            return idx.num_docs, idx.num_postings
+        return (idx.num_docs - self.tier.num_docs,
+                idx.num_postings - self.tier.num_postings)
+
+    # -- the lifecycle -----------------------------------------------------
+
+    def maybe_freeze(self) -> bool:
+        """Policy check after an ingest; starts a freeze when due."""
+        if self.in_flight:
+            return False
+        pol = self.policy
+        docs, postings = self.suffix_size()
+        due = ((pol.every_docs is not None and docs >= pol.every_docs)
+               or (pol.every_postings is not None
+                   and postings >= pol.every_postings))
+        if not due or docs == 0:
+            return False
+        self.freeze(blocking=not pol.background)
+        return True
+
+    def freeze(self, blocking: bool = False) -> bool:
+        """Snapshot now, convert (in background unless ``blocking``), swap.
+
+        Returns False if a freeze is already in flight.  The caller thread
+        pays for ``collate_now`` (the §5.5 copy plus, on device-capable
+        layouts, the device-image snapshot it has always implied) and one
+        ``clone()`` memcpy — the expensive static re-encode runs off-thread;
+        queries keep being served from the previous tier + dynamic suffix
+        until the swap.
+        """
+        if self.in_flight:
+            if not blocking:
+                return False
+            self.wait()
+        eng = self.engine
+        if eng.index.word_level:
+            raise ValueError("static tiers are doc-level (word-level "
+                             "conversion is a ROADMAP item)")
+        eng.collate_now()           # shared freeze point with the device tier
+        snapshot = eng.index.clone()
+        epoch = self.epoch + 1
+        t0 = time.perf_counter()
+
+        def work():
+            static = StaticIndex.freeze(snapshot, self.policy.codec)
+            static.epoch = epoch
+            tier = StaticTier(index=static, num_docs=snapshot.num_docs,
+                              num_postings=snapshot.num_postings,
+                              epoch=epoch)
+            # atomic publish: one reference assignment, immutable payload
+            # (Engine.stats() re-derives freezes/tier_epoch from here)
+            self.tier = tier
+            self.epoch = epoch
+            self.freezes += 1
+            self.last_freeze_s = time.perf_counter() - t0
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True,
+                                            name=f"freeze-epoch-{epoch}")
+            self._thread.start()
+        return True
+
+
+__all__ = ["FreezePolicy", "StaticTier", "FreezeManager"]

@@ -146,6 +146,61 @@ class PostingsCursor:
         return self._exhausted
 
 
+class ChainedCursor:
+    """Concatenate cursors over disjoint, ascending docid ranges.
+
+    The tiered engine path chains a :class:`~repro.core.static_index.
+    StaticPostingsCursor` over the frozen tier (docids <= horizon) with a
+    :class:`PostingsCursor` sought past the horizon — one DAAT cursor over
+    the whole collection, same ``next``/``seek_geq`` protocol.  ``None`` and
+    initially-exhausted parts are dropped.
+    """
+
+    __slots__ = ("_cs", "_i", "docid", "payload", "_exhausted")
+
+    def __init__(self, cursors):
+        self._cs = [c for c in cursors if c is not None and not c.exhausted]
+        self._i = 0
+        self.docid = 0
+        self.payload = 0
+        self._exhausted = not self._cs
+        if not self._exhausted:
+            self._adopt()
+
+    def _adopt(self) -> None:
+        c = self._cs[self._i]
+        self.docid = c.docid
+        self.payload = c.payload
+
+    def next(self) -> bool:
+        if self._exhausted:
+            return False
+        if self._cs[self._i].next():
+            self._adopt()
+            return True
+        self._i += 1
+        if self._i < len(self._cs):
+            self._adopt()
+            return True
+        self._exhausted = True
+        return False
+
+    def seek_geq(self, target: int) -> bool:
+        if self._exhausted:
+            return False
+        while self._i < len(self._cs):
+            if self._cs[self._i].seek_geq(target):
+                self._adopt()
+                return True
+            self._i += 1
+        self._exhausted = True
+        return False
+
+    @property
+    def exhausted(self) -> bool:
+        return self._exhausted
+
+
 # --------------------------------------------------------------------------
 # term statistics (planner inputs)
 # --------------------------------------------------------------------------
@@ -186,6 +241,16 @@ def conjunctive_query(index: DynamicIndex, terms) -> np.ndarray:
     cursors = [PostingsCursor(index.store, h) for h in ptrs]
     # rarest-first ordering minimizes candidate count
     cursors.sort(key=lambda c: index.store.get_ft(c.h_ptr * index.store.B))
+    return conjunctive_from_cursors(cursors)
+
+
+def conjunctive_from_cursors(cursors) -> np.ndarray:
+    """DAAT AND over any positioned postings cursors (``PostingsCursor``,
+    ``StaticPostingsCursor``, ``ChainedCursor`` — anything speaking the
+    ``next``/``seek_geq`` protocol).  Callers order rarest-first; an
+    initially-exhausted (or missing) cursor makes the intersection empty."""
+    if not cursors or any(c is None or c.exhausted for c in cursors):
+        return np.zeros(0, dtype=np.int64)
     out = []
     lead = cursors[0]
     while not lead.exhausted:

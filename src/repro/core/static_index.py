@@ -14,9 +14,22 @@ PISA baselines:
 ``freeze`` converts a DynamicIndex (one full decode + re-encode pass — the
 paper's "fast conversion of the dynamic index to a 'normal' static compressed
 inverted index"), and both codecs are measured in benchmarks/table9.
+
+Beyond the offline Table-9 measurement, the static index is a live SERVING
+tier (see ``core/lifecycle.py``): ``postings_iter`` returns a
+:class:`StaticPostingsCursor` with the same ``next``/``seek_geq`` protocol as
+``core.query.PostingsCursor``, so DAAT conjunctive evaluation runs directly
+over the compressed image.  For bp128 the cursor skips block-at-a-time using
+a per-list skip table (last docid per 128-gap block, recorded at encode
+time; the in-stream bit offsets are recovered from the existing 5-bit width
+headers, so the only extra stored state is one docid per block).  Interp has
+no block structure — its cursor decodes the list once and seeks by binary
+search.
 """
 
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -160,16 +173,43 @@ def bp_decode(n: int, r: BitReader) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 
+@dataclass
+class TermList:
+    """One term's compressed postings plus serving metadata.
+
+    ``d_last`` (bp128 only) is the skip table: the docid of the last posting
+    in each 128-gap block, ascending — ``seek_geq`` binary-searches it to
+    land on the one block that must be decoded.  ``d_bits``/``f_bits`` cache
+    the bit offset of each docid/frequency block's 5-bit width header; they
+    are *derived* from the headers on first cursor use, not stored, so they
+    cost no index bytes.
+    """
+
+    n: int
+    words: np.ndarray
+    last_d: int
+    sum_f: int
+    d_last: np.ndarray | None = None   # (nblk,) skip table (bp128)
+    d_bits: np.ndarray | None = None   # (nblk,) derived lazily
+    f_bits: np.ndarray | None = None   # (nblk,) derived lazily
+
+
 class StaticIndex:
-    """Frozen, maximally-compressed image of a dynamic doc-level index."""
+    """Frozen, maximally-compressed image of a dynamic doc-level index.
+
+    ``epoch`` identifies the freeze generation this image belongs to (set by
+    the lifecycle's :class:`~repro.core.lifecycle.FreezeManager`; it keys the
+    serving layer's query-result cache).
+    """
 
     def __init__(self, codec: str = "bp128"):
         assert codec in ("bp128", "interp")
         self.codec = codec
         self.terms: dict[bytes, int] = {}
-        self.lists: list[tuple] = []  # (n, words, last_docid) per term
+        self.lists: list[TermList] = []
         self.num_docs = 0
         self.num_postings = 0
+        self.epoch = 0
 
     # -- encode ---------------------------------------------------------
 
@@ -185,8 +225,18 @@ class StaticIndex:
         return out
 
     def add_list(self, term: bytes, docids: np.ndarray, fs: np.ndarray):
-        w = BitWriter()
+        docids = np.asarray(docids, dtype=np.int64)
+        fs = np.asarray(fs, dtype=np.int64)
         n = len(docids)
+        tb = bytes(term)
+        if n == 0:
+            # empty and pathological lists must not crash a lifecycle swap
+            self.terms[tb] = len(self.lists)
+            self.lists.append(TermList(0, np.zeros(0, np.uint32), 0, 0,
+                                       d_last=np.zeros(0, np.int64)))
+            return
+        w = BitWriter()
+        d_last = None
         if self.codec == "interp":
             interp_encode(docids, 1, int(docids[-1]), w)
             # frequencies: strictly-increasing prefix sums, coded the same way
@@ -196,24 +246,34 @@ class StaticIndex:
             gaps = np.diff(docids, prepend=0)
             bp_encode(gaps, w)
             bp_encode(fs, w)
-        self.terms[bytes(term)] = len(self.lists)
-        self.lists.append((n, w.flush(), int(docids[-1]), int(fs.sum())))
+            # skip table: last docid of each 128-gap block
+            d_last = docids[np.minimum(
+                np.arange(BP_BLOCK - 1, n + BP_BLOCK - 1, BP_BLOCK), n - 1)]
+        self.terms[tb] = len(self.lists)
+        self.lists.append(TermList(n, w.flush(), int(docids[-1]),
+                                   int(fs.sum()), d_last=d_last))
         self.num_postings += n
 
     # -- decode ----------------------------------------------------------
 
-    def postings(self, term) -> tuple[np.ndarray, np.ndarray]:
+    def _index_of(self, term) -> int | None:
         tb = term.encode() if isinstance(term, str) else bytes(term)
-        ti = self.terms.get(tb)
+        return self.terms.get(tb)
+
+    def postings(self, term) -> tuple[np.ndarray, np.ndarray]:
+        ti = self._index_of(term)
         if ti is None:
             return np.zeros(0, np.int64), np.zeros(0, np.int64)
-        n, words, last_d, sum_f = self.lists[ti]
-        r = BitReader(words)
+        rec = self.lists[ti]
+        if rec.n == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        r = BitReader(rec.words)
+        n = rec.n
         if self.codec == "interp":
             docids: list = []
-            interp_decode(n, 1, last_d, r, docids)
+            interp_decode(n, 1, rec.last_d, r, docids)
             shifted: list = []
-            interp_decode(n, 1, sum_f + n, r, shifted)
+            interp_decode(n, 1, rec.sum_f + n, r, shifted)
             csum = np.asarray(shifted, dtype=np.int64) - np.arange(n)
             fs = np.diff(csum, prepend=0)
             return np.asarray(docids, dtype=np.int64), fs
@@ -221,13 +281,162 @@ class StaticIndex:
         fs = bp_decode(n, r)
         return np.cumsum(gaps), fs
 
+    def ft(self, term) -> int:
+        ti = self._index_of(term)
+        return self.lists[ti].n if ti is not None else 0
+
+    def postings_iter(self, term) -> "StaticPostingsCursor | None":
+        """A DAAT cursor over the compressed list (None if term unknown or
+        empty).  Protocol-compatible with ``core.query.PostingsCursor``."""
+        ti = self._index_of(term)
+        if ti is None or self.lists[ti].n == 0:
+            return None
+        return StaticPostingsCursor(self, ti)
+
     # -- accounting (Table 9: "including vocabulary and other files") ----
 
     def total_bytes(self) -> int:
-        postings = sum(4 * len(wds) for _, wds, _, _ in self.lists)
+        postings = sum(4 * len(rec.words) for rec in self.lists)
         # vocabulary: term bytes + (offset, n, last_d, sum_f) per term
         vocab = sum(len(t) + 1 for t in self.terms) + 16 * len(self.lists)
-        return postings + vocab
+        # bp128 skip table: one stored docid per block (offsets are derived)
+        skip = sum(4 * len(rec.d_last) for rec in self.lists
+                   if rec.d_last is not None)
+        return postings + vocab + skip
 
     def bytes_per_posting(self) -> float:
         return self.total_bytes() / max(1, self.num_postings)
+
+    # -- skip-table completion (derived from the 5-bit width headers) ----
+
+    def _block_offsets(self, rec: TermList):
+        """Bit offsets of every docid/frequency block header, recovered by
+        walking the in-stream width headers (no decode of the packed
+        values)."""
+        if rec.d_bits is not None:
+            return rec.d_bits, rec.f_bits
+        nblk = (rec.n + BP_BLOCK - 1) // BP_BLOCK
+        d_bits = np.zeros(nblk, np.int64)
+        f_bits = np.zeros(nblk, np.int64)
+        r = BitReader(rec.words)
+        off = 0
+        for arr in (d_bits, f_bits):
+            for j in range(nblk):
+                arr[j] = off
+                cnt = min(BP_BLOCK, rec.n - j * BP_BLOCK)
+                r.pos = off
+                width = r.read(5)
+                off += 5 + width * cnt
+        rec.d_bits, rec.f_bits = d_bits, f_bits
+        return d_bits, f_bits
+
+
+class StaticPostingsCursor:
+    """DAAT cursor over one compressed static list: ``next``/``seek_geq``
+    with (docid, payload) state, the protocol of
+    ``core.query.PostingsCursor``.
+
+    bp128: decodes one 128-posting block at a time; ``seek_geq`` first
+    binary-searches the skip table (``d_last``) so only the single candidate
+    block is ever decoded.  interp: the recursion has no sub-list entry
+    points, so the list is decoded once up front and sought by binary
+    search.
+    """
+
+    __slots__ = ("static", "rec", "_blk", "_d", "_f", "_k",
+                 "docid", "payload", "_exhausted")
+
+    def __init__(self, static: StaticIndex, ti: int):
+        self.static = static
+        self.rec = static.lists[ti]
+        self._blk = -1
+        self._d: np.ndarray | None = None
+        self._f: np.ndarray | None = None
+        self._k = -1
+        self.docid = 0
+        self.payload = 0
+        self._exhausted = self.rec.n == 0
+        if not self._exhausted:
+            self._load_block(0)
+            self._advance_to(0, 0)
+
+    # -- block machinery -------------------------------------------------
+
+    def _nblocks(self) -> int:
+        if self.static.codec == "interp":
+            return 1
+        return (self.rec.n + BP_BLOCK - 1) // BP_BLOCK
+
+    def _load_block(self, j: int) -> None:
+        rec = self.rec
+        if self.static.codec == "interp":
+            # one "block" = the whole list
+            r = BitReader(rec.words)
+            docids: list = []
+            interp_decode(rec.n, 1, rec.last_d, r, docids)
+            shifted: list = []
+            interp_decode(rec.n, 1, rec.sum_f + rec.n, r, shifted)
+            csum = np.asarray(shifted, dtype=np.int64) - np.arange(rec.n)
+            self._d = np.asarray(docids, dtype=np.int64)
+            self._f = np.diff(csum, prepend=0)
+            self._blk = 0
+            return
+        d_bits, f_bits = self.static._block_offsets(rec)
+        cnt = min(BP_BLOCK, rec.n - j * BP_BLOCK)
+        r = BitReader(rec.words)
+        r.pos = int(d_bits[j])
+        gaps = bp_decode(cnt, r)
+        r.pos = int(f_bits[j])
+        fs = bp_decode(cnt, r)
+        base = int(self.rec.d_last[j - 1]) if j > 0 else 0
+        self._d = base + np.cumsum(gaps)
+        self._f = fs
+        self._blk = j
+
+    def _advance_to(self, j: int, k: int) -> None:
+        self._k = k
+        self.docid = int(self._d[k])
+        self.payload = int(self._f[k])
+
+    # -- protocol ---------------------------------------------------------
+
+    def next(self) -> bool:
+        if self._exhausted:
+            return False
+        if self._k + 1 < len(self._d):
+            self._advance_to(self._blk, self._k + 1)
+            return True
+        if self._blk + 1 < self._nblocks():
+            self._load_block(self._blk + 1)
+            self._advance_to(self._blk, 0)
+            return True
+        self._exhausted = True
+        return False
+
+    def seek_geq(self, target: int) -> bool:
+        """Position on the first posting with docid >= target."""
+        if self._exhausted:
+            return False
+        if self.docid >= target:
+            return True
+        if target > self.rec.last_d:
+            self._exhausted = True
+            return False
+        if self.static.codec == "bp128":
+            # skip: first block whose last docid >= target
+            j = int(np.searchsorted(self.rec.d_last, target, side="left"))
+            if j > self._blk:
+                self._load_block(j)
+                self._advance_to(j, 0)
+                if self.docid >= target:
+                    return True
+        k = int(np.searchsorted(self._d, target, side="left"))
+        if k >= len(self._d):  # only when already in the final block
+            self._exhausted = True
+            return False
+        self._advance_to(self._blk, k)
+        return True
+
+    @property
+    def exhausted(self) -> bool:
+        return self._exhausted

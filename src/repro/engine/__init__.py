@@ -8,7 +8,7 @@ querying — is served here through a single API:
     res = eng.execute(Query(mode="conjunctive", terms=("fast", "index")))
     res.docids, res.scores, res.backend
 
-Three pluggable backends execute the same query semantics:
+Four pluggable backends execute the same query semantics:
 
   * :class:`~repro.engine.backends.HostBackend` — the paper-faithful
     cursor/TAAT code in ``core/query.py`` (always available; the only
@@ -20,14 +20,25 @@ Three pluggable backends execute the same query semantics:
     ``collate()`` (immediate access on the TPU path);
   * :class:`~repro.engine.backends.PallasBackend` — the Pallas kernels
     (``kernels/intersect``, ``kernels/topk_score``) discovered through
-    ``kernels/registry``.
+    ``kernels/registry``;
+  * :class:`~repro.engine.backends.TieredBackend` — the frozen docid prefix
+    served from the compressed :class:`~repro.core.static_index.StaticIndex`
+    tier published by :class:`~repro.core.lifecycle.FreezeManager`
+    (background freeze, atomic swap), merged exactly with the post-freeze
+    dynamic suffix.
 
 A :class:`~repro.engine.planner.Planner` selects the backend per batch from
 term statistics (f_t, chain lengths, batch size), with a forced-override
 knob (``Engine(force_backend=...)`` or ``Query(backend=...)``).
 """
 
-from .backends import HostBackend, PallasBackend, UnsupportedQueryError
+from ..core.lifecycle import FreezeManager, FreezePolicy, StaticTier
+from .backends import (
+    HostBackend,
+    PallasBackend,
+    TieredBackend,
+    UnsupportedQueryError,
+)
 from .device_backend import DeviceBackend
 from .engine import Engine
 from .planner import PlanDecision, Planner, PlannerConfig
@@ -36,5 +47,6 @@ from .types import Query, QueryResult
 __all__ = [
     "Engine", "Query", "QueryResult", "Planner", "PlannerConfig",
     "PlanDecision", "HostBackend", "DeviceBackend", "PallasBackend",
-    "UnsupportedQueryError",
+    "TieredBackend", "UnsupportedQueryError",
+    "FreezeManager", "FreezePolicy", "StaticTier",
 ]

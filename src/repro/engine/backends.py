@@ -1,8 +1,12 @@
-"""Host and Pallas execution backends.
+"""Host, Pallas, and tiered execution backends.
 
-Both operate directly on the live :class:`~repro.core.index.DynamicIndex`
-(immediate access is inherited for free); the device backend, which needs an
-image refresh protocol, lives in :mod:`repro.engine.device_backend`.
+Host and Pallas operate directly on the live :class:`~repro.core.index.
+DynamicIndex` (immediate access is inherited for free); the device backend,
+which needs an image refresh protocol, lives in
+:mod:`repro.engine.device_backend`; the tiered backend serves the frozen
+docid prefix from the compressed :class:`~repro.core.static_index.
+StaticIndex` tier published by the lifecycle (:mod:`repro.core.lifecycle`)
+and only reads the dynamic index past the tier horizon.
 """
 
 from __future__ import annotations
@@ -58,6 +62,119 @@ class HostBackend(Backend):
                     "phrase queries need a word-level index (§5.1)")
             d = hostq.phrase_query(idx, query.terms)
             return QueryResult(d, None, self.name)
+        raise UnsupportedQueryError(f"unknown mode {query.mode!r}")
+
+
+class TieredView:
+    """Index-like facade over static tier + dynamic suffix (disjoint ranges).
+
+    ``postings(term)`` concatenates the tier's compressed list (all docids
+    <= ``horizon``) with the dynamic postings strictly past the horizon —
+    read via a ``PostingsCursor`` sought to ``horizon + 1``, so the frozen
+    prefix of the live chains is skipped block-at-a-time, never decoded.
+    Because docids are ordinal and append-only, the concatenation equals the
+    full dynamic list exactly; feeding this view to the host TAAT scorers
+    (which take any object with ``num_docs``/``postings``) therefore yields
+    results byte-identical to the host backend, while the bulk of each list
+    is served from its most compressed form.
+    """
+
+    def __init__(self, engine, tier):
+        self.engine = engine
+        self.tier = tier                      # StaticTier | None
+        self.horizon = 0 if tier is None else tier.num_docs
+
+    @property
+    def num_docs(self) -> int:
+        return self.engine.index.num_docs
+
+    def suffix_postings(self, term) -> tuple[np.ndarray, np.ndarray]:
+        """Dynamic postings with docid > horizon (cursor-skipped prefix)."""
+        idx = self.engine.index
+        h = idx.lookup(term)
+        if h is None:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        c = hostq.PostingsCursor(idx.store, h)
+        if not c.seek_geq(self.horizon + 1):
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        ds, fs = [], []
+        while True:
+            ds.append(c.docid)
+            fs.append(c.payload)
+            if not c.next():
+                break
+        return (np.asarray(ds, dtype=np.int64),
+                np.asarray(fs, dtype=np.int64))
+
+    def postings(self, term) -> tuple[np.ndarray, np.ndarray]:
+        d2, f2 = self.suffix_postings(term)
+        if self.tier is None:
+            return d2, f2
+        d1, f1 = self.tier.index.postings(term)
+        if len(d1) == 0:
+            return d2, f2
+        return np.concatenate([d1, d2]), np.concatenate([f1, f2])
+
+    def cursor(self, term):
+        """One chained DAAT cursor across both tiers (None = no postings)."""
+        parts = []
+        if self.tier is not None:
+            parts.append(self.tier.index.postings_iter(term))
+        idx = self.engine.index
+        h = idx.lookup(term)
+        if h is not None:
+            c = hostq.PostingsCursor(idx.store, h)
+            if self.horizon == 0 or c.seek_geq(self.horizon + 1):
+                parts.append(c)
+        chained = hostq.ChainedCursor(parts)
+        return None if chained.exhausted else chained
+
+
+class TieredBackend(Backend):
+    """Serve each query from the static tier + dynamic suffix, exactly.
+
+    Boolean conjunctive runs DAAT over :class:`~repro.core.query.
+    ChainedCursor`s (seek_GEQ skipping inside the compressed tier via its
+    bp128 skip tables); ranked modes reuse the host TAAT scorers over the
+    :class:`TieredView`, so idf/BM25 statistics are the live collection's —
+    the same contract the device backend's frozen+delta merge enforces.
+    Works with no tier published yet (the view degenerates to the pure
+    dynamic path), so routing to it is always safe.
+    """
+
+    name = "tiered"
+
+    def view(self) -> TieredView:
+        return TieredView(self.engine, self.engine.static_tier())
+
+    def execute(self, query: Query) -> QueryResult:
+        eng = self.engine
+        if eng.index.word_level or query.mode == "phrase":
+            raise UnsupportedQueryError(
+                "the tiered backend is doc-level (phrase/word-level queries "
+                "run on the host backend)")
+        view = self.view()
+        if query.mode == "conjunctive":
+            cursors = []
+            for t in query.terms:
+                c = view.cursor(t)
+                if c is None:
+                    return QueryResult(np.zeros(0, np.int64), None, self.name)
+                tid = eng.term_id(t)
+                cursors.append((eng._fts[tid] if tid is not None else 0, c))
+            if not cursors:
+                return QueryResult(np.zeros(0, np.int64), None, self.name)
+            # rarest-first via the engine's O(1) global f_t counters
+            cursors.sort(key=lambda p: p[0])
+            d = hostq.conjunctive_from_cursors([c for _, c in cursors])
+            return QueryResult(d, None, self.name)
+        if query.mode == "ranked_tfidf":
+            d, s = hostq.ranked_disjunctive_taat(view, query.terms, k=query.k)
+            return QueryResult(d, s, self.name)
+        if query.mode == "bm25":
+            d, s = hostq.ranked_bm25(view, query.terms, eng.doclens_array(),
+                                     k=query.k)
+            return QueryResult(d, s, self.name)
         raise UnsupportedQueryError(f"unknown mode {query.mode!r}")
 
 

@@ -13,8 +13,14 @@ import numpy as np
 
 from ..core.collate import collate
 from ..core.index import DynamicIndex
+from ..core.lifecycle import FreezeManager, FreezePolicy
 from ..core.query import TermStats
-from .backends import HostBackend, PallasBackend, UnsupportedQueryError
+from .backends import (
+    HostBackend,
+    PallasBackend,
+    TieredBackend,
+    UnsupportedQueryError,
+)
 from .device_backend import DeviceBackend
 from .planner import Planner, PlannerConfig
 from .types import EngineStats, Query, QueryResult
@@ -41,6 +47,12 @@ class Engine:
         fraction of the frozen image triggers a full collation first —
         bounding delta size (and device query cost) without ever collating
         on the query path for small deltas.
+    tier_policy:
+        enable the tiered static lifecycle (``core.lifecycle``): a
+        :class:`~repro.core.lifecycle.FreezeManager` converts the frozen
+        docid prefix into a compressed :class:`StaticIndex` tier on a
+        background thread per this policy, and the tiered backend serves
+        the prefix from it.
     """
 
     def __init__(self, B: int = 64, growth: str = "const",
@@ -49,7 +61,8 @@ class Engine:
                  planner: PlannerConfig | None = None,
                  force_backend: str | None = None,
                  decode_fn=None, interpret: bool | None = None,
-                 auto_collate_delta_frac: float | None = None):
+                 auto_collate_delta_frac: float | None = None,
+                 tier_policy: FreezePolicy | None = None):
         self.index = index if index is not None else DynamicIndex(
             B=B, growth=growth, F=F, word_level=word_level)
         self.planner = Planner(planner, force_backend)
@@ -64,9 +77,28 @@ class Engine:
             "host": HostBackend(self),
             "device": DeviceBackend(self, decode_fn=decode_fn),
             "pallas": PallasBackend(self, interpret=interpret),
+            "tiered": TieredBackend(self),
         }
+        self.lifecycle: FreezeManager | None = None
+        if tier_policy is not None:
+            self.enable_tiering(tier_policy)
         if index is not None:
             self._adopt_existing()
+
+    def enable_tiering(self, policy: FreezePolicy | None = None
+                       ) -> FreezeManager:
+        """Attach (or reconfigure) the static-tier lifecycle."""
+        if self.index.word_level:
+            raise ValueError("the tiered lifecycle is doc-level "
+                             "(word-level static conversion is a ROADMAP "
+                             "item)")
+        self.lifecycle = FreezeManager(self, policy)
+        return self.lifecycle
+
+    def static_tier(self):
+        """The published :class:`~repro.core.lifecycle.StaticTier` (or
+        None); swapped atomically by the lifecycle's background freeze."""
+        return self.lifecycle.tier if self.lifecycle is not None else None
 
     def _adopt_existing(self) -> None:
         """Register terms/doclens of a pre-built index (doclens are
@@ -134,6 +166,8 @@ class Engine:
                 self._fts[self._intern(tb)] += 1
         self._doclens.append(len(terms))
         self.version += 1
+        if self.lifecycle is not None:
+            self.lifecycle.maybe_freeze()
         return d
 
     def collate_now(self) -> None:
@@ -177,7 +211,9 @@ class Engine:
                      for t in q.terms]
             plans.append(self.planner.plan(
                 q, len(queries), stats, device_capable=self.device_capable,
-                pallas_capable=self.pallas_capable))
+                pallas_capable=self.pallas_capable,
+                tiered_available=self.static_tier() is not None,
+                tiered_capable=not self.index.word_level))
         out: list[QueryResult | None] = [None] * len(queries)
         by_backend: dict[str, list[int]] = {}
         for i, p in enumerate(plans):
@@ -203,6 +239,9 @@ class Engine:
         s.num_docs = self.index.num_docs
         s.num_postings = self.index.num_postings
         s.vocab_size = len(self.vocab)
+        if self.lifecycle is not None:
+            s.freezes = self.lifecycle.freezes
+            s.tier_epoch = self.lifecycle.epoch
         return s
 
 

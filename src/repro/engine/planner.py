@@ -17,7 +17,17 @@ rivals execution cost.  Routing rules, in priority order:
 4. single/small queries whose candidate volume (min f_t for conjunctive —
    the driver of DAAT cost — or Σ f_t for ranked) exceeds
    ``pallas_min_postings`` go to the Pallas kernels;
-5. everything else stays on the host, whose seek_GEQ skipping beats a
+5. when the lifecycle has published a static tier (``tiered_available``),
+   remaining queries whose candidate volume stays under
+   ``tiered_max_volume`` go to the tiered backend: the frozen docid prefix
+   is served from the compressed image (bp128 skip tables for seek_GEQ)
+   and only the post-freeze suffix touches the live chains.  This trades a
+   modest per-query decode cost (see BENCH_engine.json: tiered runs
+   1.4–2.6× the host latency on hot terms) for keeping the working set in
+   the ~1.6 B/posting static image instead of the dynamic chains — the
+   volume gate bounds the absolute penalty to the small-query regime where
+   it is microseconds;
+6. everything else stays on the host, whose seek_GEQ skipping beats a
    device round-trip on short chains.
 """
 
@@ -35,8 +45,10 @@ class PlannerConfig:
 
     device_min_batch: int = 4       # batch size at which the device image wins
     pallas_min_postings: int = 2048  # candidate volume at which kernels win
+    tiered_max_volume: int = 2048   # volume ceiling for tiered routing
     allow_device: bool = True
     allow_pallas: bool = True
+    allow_tiered: bool = True
 
 
 class PlanDecision(NamedTuple):
@@ -51,8 +63,9 @@ class Planner:
         self.force_backend = force_backend
 
     def plan(self, query: Query, batch_size: int, stats: list[TermStats],
-             *, device_capable: bool,
-             pallas_capable: bool = True) -> PlanDecision:
+             *, device_capable: bool, pallas_capable: bool = True,
+             tiered_available: bool = False,
+             tiered_capable: bool = True) -> PlanDecision:
         """Pick a backend for ``query`` arriving in a batch of ``batch_size``.
 
         ``stats`` aligns with ``query.terms``; ``device_capable`` reports
@@ -60,15 +73,20 @@ class Planner:
         doc-level), ``pallas_capable`` whether the kernels apply (doc-level
         — Pallas decodes postings host-side, so variable-block growth is
         fine, but word-level lists carry w-gap payloads and duplicate
-        docids the kernels do not model).
+        docids the kernels do not model).  ``tiered_capable`` reports
+        whether the tiered backend can run at all (doc-level);
+        ``tiered_available`` whether a static tier is actually published —
+        routing prefers it over the host only then, since with no tier it
+        degenerates to the host path with extra indirection.
         """
         cfg = self.config
         forced = query.backend or self.force_backend
         if forced is not None:
             unsupported = (query.mode == "phrase" or
                            (forced == "device" and not device_capable) or
-                           (forced == "pallas" and not pallas_capable))
-            if forced in ("device", "pallas") and unsupported:
+                           (forced == "pallas" and not pallas_capable) or
+                           (forced == "tiered" and not tiered_capable))
+            if forced in ("device", "pallas", "tiered") and unsupported:
                 raise ValueError(
                     f"backend {forced!r} forced, but {query.mode!r} queries "
                     "on this index layout require the host backend")
@@ -87,5 +105,9 @@ class Planner:
                 and volume >= cfg.pallas_min_postings):
             return PlanDecision(
                 "pallas", f"candidate volume {volume} favours kernels")
+        if (cfg.allow_tiered and tiered_capable and tiered_available
+                and volume <= cfg.tiered_max_volume):
+            return PlanDecision(
+                "tiered", "static tier serves the frozen prefix compressed")
         return PlanDecision(
             "host", f"candidate volume {volume} favours cursor skipping")

@@ -11,7 +11,7 @@ import numpy as np
 MODES = ("conjunctive", "ranked_tfidf", "bm25", "phrase")
 
 #: Backends a query may force via ``Query.backend``.
-BACKENDS = ("host", "device", "pallas")
+BACKENDS = ("host", "device", "pallas", "tiered")
 
 
 @dataclass(frozen=True)
@@ -36,6 +36,10 @@ class Query:
         if self.backend is not None and self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"expected one of {BACKENDS}")
+        if self.k < 1:
+            # k=0 slices diverge across backends (nz[-0:] keeps everything
+            # host-side, top_k keeps nothing) — reject rather than diverge
+            raise ValueError(f"k must be >= 1, got {self.k}")
         object.__setattr__(self, "terms", tuple(self.terms))
 
 
@@ -68,4 +72,6 @@ class EngineStats:
     queries: int = 0
     collations: int = 0
     delta_refreshes: int = 0
+    freezes: int = 0          # static-tier freezes completed (lifecycle)
+    tier_epoch: int = 0       # epoch of the published static tier
     by_backend: dict = field(default_factory=dict)

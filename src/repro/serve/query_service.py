@@ -10,11 +10,19 @@ delay for much higher throughput.
 Synchronous core, deliberately: one writer per shard is the paper's (and
 Asadi & Lin's) concurrency model, and a thread-safe wrapper can wrap
 ``submit``/``flush`` without touching engine internals.
+
+**Result cache**: repeated queries between ingests are answered from a small
+LRU keyed by ``(engine.version, static-tier epoch, query)``.  Both key
+components exist precisely so invalidation is free: every ingest bumps
+``version`` and every lifecycle tier swap bumps the epoch, so a stale entry
+can never be returned — it simply stops being addressable.  Entries are
+bounded by ``cache_size`` (0 disables caching entirely).
 """
 
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from ..engine.types import Query, QueryResult
@@ -39,12 +47,39 @@ class QueryService:
     :class:`~repro.core.sharded_index.ShardedEngine` — anything with
     ``add_document``/``execute_many``)."""
 
-    def __init__(self, engine, max_batch: int = 32):
+    def __init__(self, engine, max_batch: int = 32, cache_size: int = 256):
         self.engine = engine
         self.max_batch = max_batch
         self._pending: list[Ticket] = []
         self.query_latencies: list[float] = []
         self.ingest_latencies: list[float] = []
+        self.cache_size = cache_size
+        self._cache: OrderedDict[tuple, QueryResult] = OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- result cache ----------------------------------------------------
+
+    def _cache_key(self, query: Query) -> tuple | None:
+        """(version, tier epoch, query) — None when the engine exposes no
+        version counter (e.g. a bare sharded fan-out) or caching is off."""
+        if self.cache_size <= 0:
+            return None
+        version = getattr(self.engine, "version", None)
+        if version is None:
+            return None
+        lifecycle = getattr(self.engine, "lifecycle", None)
+        epoch = lifecycle.epoch if lifecycle is not None else 0
+        return (version, epoch, query)
+
+    @staticmethod
+    def _copy_result(r: QueryResult) -> QueryResult:
+        """Results are mutable dataclasses over writable arrays; the cache
+        stores and serves private copies so no caller's in-place edits can
+        corrupt a later hit."""
+        return QueryResult(r.docids.copy(),
+                           None if r.scores is None else r.scores.copy(),
+                           r.backend, r.reason)
 
     # -- ingest ---------------------------------------------------------
 
@@ -68,14 +103,34 @@ class QueryService:
         return t
 
     def flush(self) -> list[Ticket]:
-        """Execute every pending query as one planned batch."""
+        """Execute every pending query as one planned batch (cache-aware:
+        hits are filled without touching the engine; one engine batch runs
+        the misses)."""
         batch, self._pending = self._pending, []
         if not batch:
             return []
-        results = self.engine.execute_many([t.query for t in batch])
+        misses: list[Ticket] = []
+        for t in batch:
+            key = self._cache_key(t.query)
+            hit = self._cache.get(key) if key is not None else None
+            if hit is not None:
+                self._cache.move_to_end(key)
+                self.cache_hits += 1
+                t.result = self._copy_result(hit)
+            else:
+                self.cache_misses += key is not None
+                misses.append(t)
+        if misses:
+            results = self.engine.execute_many([t.query for t in misses])
+            for t, r in zip(misses, results):
+                t.result = r
+                key = self._cache_key(t.query)
+                if key is not None:
+                    self._cache[key] = self._copy_result(r)
+                    while len(self._cache) > self.cache_size:
+                        self._cache.popitem(last=False)
         now = time.perf_counter()
-        for t, r in zip(batch, results):
-            t.result = r
+        for t in batch:
             t.latency_s = now - t.submitted_at
             self.query_latencies.append(t.latency_s)
         return batch
@@ -115,4 +170,8 @@ class QueryService:
                 a = np.asarray(xs)
                 out[name] = {"n": len(a), "mean_us": float(a.mean() * 1e6),
                              "p99_us": float(np.quantile(a, 0.99) * 1e6)}
+        if self.cache_hits or self.cache_misses:
+            out["cache"] = {"hits": self.cache_hits,
+                            "misses": self.cache_misses,
+                            "entries": len(self._cache)}
         return out

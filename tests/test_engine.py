@@ -113,6 +113,30 @@ def test_device_answers_post_freeze_docs_without_collate(engine_const):
     assert eng.stats().delta_refreshes >= 1
 
 
+def test_k_below_one_rejected():
+    """k=0 slices diverge across backends — Query must reject it."""
+    with pytest.raises(ValueError):
+        Query(terms=("a",), mode="ranked_tfidf", k=0)
+    with pytest.raises(ValueError):
+        Query(terms=("a",), mode="bm25", k=-3)
+
+
+def test_device_large_k_clamped(engine_const):
+    """k beyond the accumulator width must clamp, not crash top_k
+    (both the dense ranked path and the sort-based bm25 path)."""
+    vocab, eng = engine_const
+    for mode in ("ranked_tfidf", "bm25"):
+        r = eng.execute(Query(terms=(vocab[0], vocab[2]), mode=mode,
+                              k=5000, backend="device"))
+        exp_d, exp_s = _host_expected(eng, Query(terms=(vocab[0], vocab[2]),
+                                                 mode=mode, k=5000))
+        assert len(r.scores) == len(exp_s)
+        # the full tail is compared here (not just top-10), so f32-vs-f64
+        # accumulation differences on tiny scores need a looser tolerance
+        assert np.allclose(np.sort(r.scores), np.sort(exp_s),
+                           rtol=1e-3, atol=1e-6)
+
+
 def test_device_works_before_any_collation(small_docs):
     """Empty frozen image + all-delta: the device path needs no collate at
     all (the delta covers the whole index)."""

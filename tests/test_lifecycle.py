@@ -1,0 +1,258 @@
+"""Tiered static-tier lifecycle: background freeze, atomic swap, exact
+merge with the dynamic suffix, planner routing, and the serving-layer
+query-result cache (epoch/version keyed)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.lifecycle import FreezeManager, FreezePolicy
+from repro.engine import Engine, Query as EQuery, UnsupportedQueryError
+from repro.serve import QueryService
+
+
+@pytest.fixture(scope="module")
+def stream_docs():
+    rng = np.random.default_rng(77)
+    vocab = [f"t{i}" for i in range(150)]
+    probs = 1.0 / np.arange(1, 151) ** 1.05
+    probs /= probs.sum()
+    docs = [[vocab[i] for i in rng.choice(150, size=rng.integers(5, 40),
+                                          p=probs)]
+            for _ in range(300)]
+    return vocab, docs
+
+
+def _assert_identical(eng, terms, mode, k=10):
+    rt = eng.execute(EQuery(terms=terms, mode=mode, k=k, backend="tiered"))
+    rh = eng.execute(EQuery(terms=terms, mode=mode, k=k, backend="host"))
+    assert rt.backend == "tiered" and rh.backend == "host"
+    assert rt.docids.tolist() == rh.docids.tolist(), (mode, terms)
+    if mode != "conjunctive":
+        # byte-identical scores: same arithmetic over the same values
+        assert np.array_equal(rt.scores, rh.scores), (mode, terms)
+
+
+# --------------------------------------------------------------------------
+# the acceptance differential: ingest + background freeze + queries, exact
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("growth", ["const", "triangle", "expon"])
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_tiered_identical_to_host_during_background_freeze(
+        stream_docs, growth, codec):
+    """Every tiered result must be byte-identical to the host backend while
+    documents keep arriving and a background freeze completes mid-stream."""
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth=growth,
+                 tier_policy=FreezePolicy(codec=codec, background=True))
+    for d in docs[:120]:
+        eng.add_document(d)
+    rng = np.random.default_rng(3)
+
+    def check(n=4):
+        for _ in range(n):
+            nt = int(rng.integers(1, 4))
+            terms = tuple(vocab[i] for i in
+                          rng.choice(70, size=nt, replace=False))
+            for mode in ("conjunctive", "ranked_tfidf", "bm25"):
+                _assert_identical(eng, terms, mode)
+
+    check()                                   # before any tier exists
+    assert eng.lifecycle.freeze(blocking=False)
+    # the freeze runs on its own thread; ingest + queries continue against
+    # the previous (empty) tier with no availability gap
+    saw_in_flight = eng.lifecycle.in_flight
+    for d in docs[120:180]:
+        eng.add_document(d)
+        check(1)
+    eng.lifecycle.wait()
+    assert saw_in_flight or eng.lifecycle.epoch == 1
+    assert eng.lifecycle.tier is not None
+    assert eng.lifecycle.tier.epoch == 1
+    assert eng.lifecycle.tier.num_docs == 120
+    check()                                   # after the swap
+    # a second freeze epoch over the grown index
+    eng.lifecycle.freeze(blocking=True)
+    assert eng.lifecycle.tier.num_docs == eng.index.num_docs
+    for d in docs[180:220]:
+        eng.add_document(d)
+    check()
+    assert eng.stats().freezes == 2 and eng.stats().tier_epoch == 2
+
+
+def test_policy_triggers_freeze_automatically(stream_docs):
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const",
+                 tier_policy=FreezePolicy(every_docs=50, background=False))
+    for d in docs[:170]:
+        eng.add_document(d)
+    # 170 docs with a 50-doc trigger: epochs at 50, 100, 150
+    assert eng.lifecycle.freezes == 3
+    assert eng.lifecycle.tier.num_docs == 150
+    _assert_identical(eng, (vocab[0], vocab[5]), "conjunctive")
+    _assert_identical(eng, (vocab[2], vocab[9]), "bm25")
+
+
+def test_background_policy_single_freeze_in_flight(stream_docs):
+    """A freeze request while one is running is a no-op, not a pile-up."""
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const")
+    mgr = eng.enable_tiering(FreezePolicy(every_docs=10, background=True))
+    for d in docs[:150]:
+        eng.add_document(d)
+    mgr.wait()
+    # at least one freeze happened; never more than one thread at a time
+    assert 1 <= mgr.freezes <= 15
+    assert threading.active_count() < 10
+    _assert_identical(eng, (vocab[1], vocab[4]), "conjunctive")
+
+
+def test_freeze_empty_engine():
+    """Freezing before any document exists must publish an empty tier, not
+    crash (the empty-list guard in StaticIndex.add_list)."""
+    eng = Engine(B=64, growth="const", tier_policy=FreezePolicy())
+    eng.lifecycle.freeze(blocking=True)
+    tier = eng.static_tier()
+    assert tier is not None and tier.num_docs == 0 and tier.epoch == 1
+    eng.add_document(["a", "b"])
+    r = eng.execute(EQuery(terms=("a",), mode="conjunctive",
+                           backend="tiered"))
+    assert r.docids.tolist() == [1]
+
+
+def test_word_level_rejects_tiering():
+    eng = Engine(B=64, growth="const", word_level=True)
+    with pytest.raises(ValueError):
+        eng.enable_tiering(FreezePolicy())
+    with pytest.raises(ValueError):
+        Engine(B=64, growth="const", word_level=True,
+               tier_policy=FreezePolicy())
+
+
+def test_forced_tiered_on_word_level_raises():
+    eng = Engine(B=64, growth="const", word_level=True)
+    eng.add_document(["x", "y"])
+    with pytest.raises((ValueError, UnsupportedQueryError)):
+        eng.execute(EQuery(terms=("x",), mode="conjunctive",
+                           backend="tiered"))
+
+
+def test_planner_prefers_tiered_once_published(stream_docs):
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const", tier_policy=FreezePolicy())
+    for d in docs[:80]:
+        eng.add_document(d)
+    before = eng.execute(EQuery(terms=(vocab[120],), mode="conjunctive"))
+    assert before.backend == "host"          # no tier yet
+    eng.lifecycle.freeze(blocking=True)
+    after = eng.execute(EQuery(terms=(vocab[120],), mode="conjunctive"))
+    assert after.backend == "tiered"
+    # batches still go to the device image, volume still to pallas
+    batch = [EQuery(terms=(vocab[i], vocab[i + 1]), mode="ranked_tfidf")
+             for i in range(6)]
+    assert all(r.backend == "device" for r in eng.execute_many(batch))
+
+
+def test_suffix_cursor_skips_frozen_prefix(stream_docs):
+    """The tiered view reads the dynamic chains only past the horizon."""
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const", tier_policy=FreezePolicy())
+    for d in docs[:100]:
+        eng.add_document(d)
+    eng.lifecycle.freeze(blocking=True)
+    for d in docs[100:140]:
+        eng.add_document(d)
+    view = eng.backends["tiered"].view()
+    assert view.horizon == 100
+    for t in vocab[:30]:
+        ds, fs = view.suffix_postings(t)
+        full_d, full_f = eng.index.postings(t)
+        cut = np.searchsorted(full_d, 101, side="left")
+        assert ds.tolist() == full_d[cut:].tolist()
+        assert fs.tolist() == full_f[cut:].tolist()
+
+
+# --------------------------------------------------------------------------
+# serving-layer query-result cache (epoch/version keyed)
+# --------------------------------------------------------------------------
+
+
+def test_query_cache_hits_and_invalidation(stream_docs):
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const", tier_policy=FreezePolicy())
+    svc = QueryService(eng, max_batch=4, cache_size=32)
+    for d in docs[:60]:
+        svc.ingest(d)
+    q = EQuery(terms=(vocab[0], vocab[3]), mode="conjunctive")
+    r1 = svc.query(q)
+    assert svc.cache_hits == 0 and svc.cache_misses == 1
+    r2 = svc.query(q)
+    assert svc.cache_hits == 1 and r2.docids.tolist() == r1.docids.tolist()
+    # ingest bumps engine.version -> old entries unreachable
+    svc.ingest(docs[60])
+    r3 = svc.query(q)
+    assert svc.cache_misses == 2
+    assert r3.docids.tolist() == Q.brute_conjunctive(
+        eng.index, list(q.terms)).tolist()
+    # a tier swap bumps the epoch -> invalidates even with no ingest
+    svc.query(q)
+    assert svc.cache_hits == 2
+    eng.lifecycle.freeze(blocking=True)
+    svc.query(q)
+    assert svc.cache_misses == 3
+    summary = svc.latency_summary()
+    assert summary["cache"]["hits"] == 2 and summary["cache"]["misses"] == 3
+
+
+def test_query_cache_immune_to_caller_mutation(stream_docs):
+    """A caller mutating its result in place must not corrupt later hits."""
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const")
+    svc = QueryService(eng, cache_size=8)
+    for d in docs[:40]:
+        svc.ingest(d)
+    q = EQuery(terms=(vocab[0],), mode="conjunctive")
+    r1 = svc.query(q)
+    expected = r1.docids.tolist()
+    r1.docids[:] = -1          # hostile in-place edit
+    r2 = svc.query(q)
+    assert svc.cache_hits == 1
+    assert r2.docids.tolist() == expected
+    r2.docids[:] = -2          # mutating a hit copy is also harmless
+    assert svc.query(q).docids.tolist() == expected
+
+
+def test_query_cache_disabled_and_bounded(stream_docs):
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const")
+    svc = QueryService(eng, cache_size=0)
+    for d in docs[:20]:
+        svc.ingest(d)
+    q = EQuery(terms=(vocab[0],), mode="conjunctive")
+    svc.query(q)
+    svc.query(q)
+    assert svc.cache_hits == 0 and svc.cache_misses == 0
+    bounded = QueryService(eng, cache_size=2)
+    for i in range(5):
+        bounded.query(EQuery(terms=(vocab[i],), mode="conjunctive"))
+    assert len(bounded._cache) <= 2
+
+
+def test_freeze_manager_standalone(stream_docs):
+    """FreezeManager works without the Engine constructor knob."""
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const")
+    mgr = FreezeManager(eng, FreezePolicy(codec="interp"))
+    eng.lifecycle = mgr
+    for d in docs[:90]:
+        eng.add_document(d)
+    mgr.freeze(blocking=True)
+    tier = mgr.tier
+    assert tier.index.codec == "interp"
+    assert tier.num_postings == eng.index.num_postings
+    assert tier.index.bytes_per_posting() < eng.index.bytes_per_posting()
+    _assert_identical(eng, (vocab[0], vocab[2]), "ranked_tfidf")

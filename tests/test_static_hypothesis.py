@@ -1,0 +1,52 @@
+"""Hypothesis round-trip properties for the static codecs (own module so
+the importorskip cannot take the deterministic static-serving tests with
+it; CI installs hypothesis, local runs without it just skip)."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+from repro.core.static_index import BP_BLOCK, StaticIndex  # noqa: E402
+
+gap_lists = hst.lists(
+    hst.tuples(hst.integers(1, 1 << 26), hst.integers(1, 1 << 16)),
+    min_size=0, max_size=3 * BP_BLOCK + 5)
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+@settings(max_examples=60, deadline=None)
+@given(pairs=gap_lists)
+def test_roundtrip_property(codec, pairs):
+    """encode∘decode is the identity for any gap/frequency list, including
+    empty, singleton, dense (gap=1), and large-gap shapes."""
+    docids = np.cumsum([g for g, _ in pairs]).astype(np.int64)
+    fs = np.asarray([f for _, f in pairs], np.int64)
+    st = StaticIndex(codec)
+    st.add_list(b"t", docids, fs)
+    d, f = st.postings(b"t")
+    assert d.tolist() == docids.tolist()
+    assert f.tolist() == fs.tolist()
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+@settings(max_examples=25, deadline=None)
+@given(pairs=gap_lists, targets=hst.lists(hst.integers(0, 1 << 27),
+                                          min_size=1, max_size=6))
+def test_seek_geq_property(codec, pairs, targets):
+    docids = np.cumsum([g for g, _ in pairs]).astype(np.int64)
+    fs = np.asarray([f for _, f in pairs], np.int64)
+    st = StaticIndex(codec)
+    st.add_list(b"t", docids, fs)
+    c = st.postings_iter(b"t")
+    if c is None:
+        assert len(docids) == 0
+        return
+    for target in sorted(targets):
+        ok = c.seek_geq(int(target))
+        k = int(np.searchsorted(docids, target, side="left"))
+        if k >= len(docids):
+            assert not ok
+            return
+        assert ok and c.docid == int(docids[k]) and c.payload == int(fs[k])

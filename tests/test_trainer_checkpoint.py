@@ -67,7 +67,58 @@ class TestCheckpointManager:
         mgr.save(3, {"x": np.arange(3)})
         assert not any(n.startswith(".tmp") for n in os.listdir(tmp_path))
 
+    def test_async_then_blocking_same_step(self, tmp_path):
+        """Regression: a blocking save must join an in-flight async save
+        instead of racing it in the staging area (FileExistsError)."""
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = {"x": np.arange(20000)}
+        for step in range(3, 9):
+            mgr.save(step, tree, blocking=False)
+            mgr.save(step, {"x": np.arange(20000) + step}, blocking=True)
+        mgr.wait()
+        assert mgr.latest_step() == 8
+        np.testing.assert_array_equal(mgr.restore(8, like=tree)["x"],
+                                      np.arange(20000) + 8)
+        assert not any(n.startswith(".tmp") for n in os.listdir(tmp_path))
 
+    def test_interleaved_async_blocking_distinct_steps(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        for step in range(1, 7):
+            mgr.save(step, {"x": np.asarray([step])},
+                     blocking=(step % 2 == 0))
+        mgr.wait()
+        assert mgr.all_steps() == [4, 5, 6]
+
+    def test_keep_zero_retains_newest(self, tmp_path):
+        """keep=0 must never delete the newest complete checkpoint."""
+        mgr = CheckpointManager(str(tmp_path), keep=0)
+        for s in (1, 2, 3):
+            mgr.save(s, {"x": np.asarray([s])})
+        assert mgr.all_steps() == [3]
+        assert mgr.latest_step() == 3
+
+    def test_negative_keep_rejected(self, tmp_path):
+        with pytest.raises(ValueError):
+            CheckpointManager(str(tmp_path), keep=-1)
+
+    def test_crashed_staging_dirs_swept_at_next_publish(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"x": np.arange(3)})
+        # simulate a crash mid-save: an orphaned staging dir remains
+        (tmp_path / ".tmp-7-3").mkdir()
+        (tmp_path / ".tmp-7-3" / "leaf-0.npy").write_bytes(b"partial")
+        # restore-only instances must NOT sweep (they could race an active
+        # writer's in-flight staging dir)
+        reader = CheckpointManager(str(tmp_path))
+        assert reader.latest_step() == 1
+        assert (tmp_path / ".tmp-7-3").exists()
+        # the writer's next publish reclaims the orphan
+        mgr.save(2, {"x": np.arange(3)})
+        assert not any(n.startswith(".tmp") for n in os.listdir(tmp_path))
+        assert mgr.all_steps() == [1, 2]
+
+
+@pytest.mark.slow
 class TestTrainerFaultTolerance:
     def test_resume_is_bit_identical(self, tmp_path):
         step = quadratic_step()
