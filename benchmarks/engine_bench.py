@@ -21,8 +21,13 @@ from the compressed StaticIndex), the static tier's bytes-per-posting is
 reported next to the dynamic index's, and a **freeze-under-load** scenario
 ingests and queries while a background freeze completes — confirming a zero
 query-availability gap (every query during the freeze answered) and
-recording the worst query latency observed while the freeze thread ran.
-Results land in ``BENCH_engine.json``.
+recording the worst query latency observed while the freeze thread ran;
+
+plus the **word-level** point (paper §5: two bytes per posting "and only a
+small amount more for word-level indexing"): a word-level ⟨d,w⟩ engine over
+the same corpus reports dynamic and static bytes-per-posting (= per
+occurrence) under both codecs, ``num_words``, and host-vs-tiered phrase
+query latency.  Results land in ``BENCH_engine.json``.
 """
 
 from __future__ import annotations
@@ -167,6 +172,34 @@ def main() -> None:
     eng.lifecycle.wait()
     tier_after = eng.static_tier()
 
+    # ---- word-level ⟨d,w⟩ point: space + phrase latency across tiers ----
+    wdocs = docs[: max(200, args.docs // 3)]
+    weng = Engine(B=64, growth="const", word_level=True,
+                  tier_policy=FreezePolicy())
+    for d in wdocs:
+        weng.add_document(d)
+    weng.lifecycle.freeze(blocking=True)
+    wtier = weng.static_tier()
+    word_interp_bpp = StaticIndex.freeze(weng.index, "interp") \
+        .bytes_per_posting()
+    wvocab_fts = weng.global_fts()
+    wcommon = [t.decode() for t in
+               np.asarray(weng.vocab)[np.argsort(-wvocab_fts)[:50]]]
+    phrase_qs = []
+    for _ in range(args.queries):
+        i, j = rng.choice(len(wcommon), size=2, replace=False)
+        phrase_qs.append(Query(terms=(wcommon[i], wcommon[j]),
+                               mode="phrase"))
+    phrase_lat = {}
+    for backend in ("host", "tiered"):
+        forced = [Query(terms=q.terms, mode="phrase", backend=backend)
+                  for q in phrase_qs]
+        secs = _timed(lambda: weng.execute_many(forced))
+        phrase_lat[backend] = 1e6 * secs / args.queries
+        print(f"{'phrase':13s} {backend:7s} {phrase_lat[backend]:10.1f} "
+              "us/query")
+    wstats = weng.index.stats()
+
     payload = {
         "config": {"docs": eng.index.num_docs,
                    "postings": eng.index.num_postings,
@@ -198,6 +231,15 @@ def main() -> None:
             "max_batch_ms_during_freeze":
                 1e3 * max(lat_during) if lat_during else 0.0,
         },
+        "word_level": {
+            "docs": wstats["num_docs"],
+            "num_words": wstats["num_words"],
+            "num_postings": wstats["num_postings"],
+            "dynamic_bytes_per_posting": wstats["bytes_per_posting"],
+            "static_bytes_per_posting": wtier.index.bytes_per_posting(),
+            "static_bytes_per_posting_interp": word_interp_bpp,
+            "phrase_us_per_query": phrase_lat,
+        },
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
@@ -210,7 +252,14 @@ def main() -> None:
           f"{tp['dynamic_bytes_per_posting']:.2f}; freeze "
           f"{tp['background_freeze_s']:.2f}s in background, "
           f"{tp['queries_answered_during_freeze']} queries answered during "
-          f"it (gap {tp['availability_gap_queries']})  -> {args.out}")
+          f"it (gap {tp['availability_gap_queries']})")
+    wp = payload["word_level"]
+    print(f"word-level ({wp['num_words']} words): static "
+          f"{wp['static_bytes_per_posting']:.2f} B/posting (interp "
+          f"{wp['static_bytes_per_posting_interp']:.2f}) vs dynamic "
+          f"{wp['dynamic_bytes_per_posting']:.2f}; phrase "
+          f"{wp['phrase_us_per_query']['tiered']:.1f} us tiered vs "
+          f"{wp['phrase_us_per_query']['host']:.1f} us host  -> {args.out}")
 
 
 if __name__ == "__main__":

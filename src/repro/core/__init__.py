@@ -2,4 +2,8 @@
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
 from .lifecycle import FreezeManager, FreezePolicy, StaticTier  # noqa: F401
-from .static_index import StaticIndex, StaticPostingsCursor  # noqa: F401
+from .static_index import (  # noqa: F401
+    StaticIndex,
+    StaticPostingsCursor,
+    StaticWordCursor,
+)

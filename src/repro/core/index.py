@@ -212,3 +212,21 @@ class DynamicIndex:
         stats["num_postings"] = self.num_postings
         stats["bytes_per_posting"] = self.bytes_per_posting()
         return stats
+
+    def stats(self) -> dict:
+        """Cheap O(1) summary counters (no chain walk, unlike
+        ``breakdown``).  ``num_words`` counts every ingested token, so for
+        word-level indexes ``bytes_per_posting`` IS the paper's §5.1
+        bytes-per-word figure (one posting per occurrence) and for
+        doc-level indexes ``bytes_per_word`` amortizes the index over the
+        collection's token count (Table 11's denominator)."""
+        return {
+            "num_docs": self.num_docs,
+            "num_postings": self.num_postings,
+            "num_words": self.num_words,
+            "vocab_size": self.vocab_size,
+            "word_level": self.word_level,
+            "total_bytes": self.total_bytes(),
+            "bytes_per_posting": self.bytes_per_posting(),
+            "bytes_per_word": self.total_bytes() / max(1, self.num_words),
+        }

@@ -35,6 +35,12 @@ DeltaBaseline` makes for the device path.  The engine's tiered backend
 (``engine.backends.TieredBackend``) merges the two ranges and rebases
 idf/BM25 statistics to the live collection, so results are byte-identical
 to a host-backend evaluation of the full dynamic index.
+
+Word-level engines follow the identical lifecycle: ``StaticIndex.freeze``
+regroups each occurrence stream into docid/count/w-gap streams (§5.1's
+⟨d,w⟩ form), and the same disjointness argument covers positions too —
+a document's occurrences never straddle the horizon, so phrase queries
+evaluated over chained static+dynamic positional cursors are exact.
 """
 
 from __future__ import annotations
@@ -146,9 +152,6 @@ class FreezeManager:
                 return False
             self.wait()
         eng = self.engine
-        if eng.index.word_level:
-            raise ValueError("static tiers are doc-level (word-level "
-                             "conversion is a ROADMAP item)")
         eng.collate_now()           # shared freeze point with the device tier
         snapshot = eng.index.clone()
         epoch = self.epoch + 1

@@ -121,14 +121,25 @@ class PostingsCursor:
             return True
 
     def seek_geq(self, target: int) -> bool:
-        """Position on the first posting with docid >= target."""
+        """Position on the first posting with docid >= target.
+
+        Word-level chains must not hop a block whose first docid EQUALS the
+        target: the target document's earlier occurrences may end the
+        current block, and a seek must land on its FIRST occurrence (the
+        w-gap there is the absolute position — the invariant
+        ``WordPostingsCursor`` and the tiered suffix reader rely on).
+        Doc-level docids are unique, so the equal-hop stays (it skips
+        decoding the current block entirely).
+        """
         if self._exhausted:
             return False
         # fast block skip: hop while the NEXT block still starts <= target
+        # (strictly < for word-level, see above)
         while self._bi + 1 < len(self._blocks):
             nxt_first = self._peek_block_first_d(self._bi + 1,
                                                  self._block_first_d)
-            if nxt_first <= target:
+            if (nxt_first < target
+                    or (nxt_first == target and not self.store.word_level)):
                 self._prev_block_first_d = self._block_first_d
                 self._enter_block(self._bi + 1)
                 self.docid = 0  # will be set by the b-gap on first next()
@@ -146,6 +157,90 @@ class PostingsCursor:
         return self._exhausted
 
 
+class WordPostingsCursor:
+    """Document-granular view over a word-level occurrence cursor.
+
+    A word-level :class:`PostingsCursor` yields one entry per OCCURRENCE
+    (docid repeats, payload = w-gap).  This wrapper groups the run of equal
+    docids into one step: ``docid`` advances over unique documents,
+    ``payload`` is the doc's occurrence count f_{t,d}, and ``positions()``
+    returns the doc's absolute word positions (cumulative w-gaps).  It is
+    the dynamic-chain counterpart of :class:`~repro.core.static_index.
+    StaticWordCursor`, so phrase/conjunctive evaluation is uniform across
+    tiers.  The wrapped cursor must be positioned on the FIRST occurrence
+    of its current document (true after construction or any ``seek_geq`` —
+    occurrences are stored in (d, w) order, so a docid-targeted seek always
+    lands on a document's first occurrence).
+    """
+
+    __slots__ = ("_cur", "_pending", "_positions", "docid", "payload",
+                 "_exhausted")
+
+    def __init__(self, cur: "PostingsCursor"):
+        self._cur = cur
+        self._exhausted = cur.exhausted
+        self.docid = 0
+        self.payload = 0
+        self._positions = np.zeros(0, dtype=np.int64)
+        self._pending = False
+        if not self._exhausted:
+            self._gather()
+
+    def _gather(self) -> None:
+        """Consume the current document's occurrence run; leaves the wrapped
+        cursor parked on the next document's first occurrence (or spent)."""
+        cur = self._cur
+        d = cur.docid
+        ws = []
+        w = 0
+        while True:
+            w += cur.payload          # w-gap -> absolute position
+            ws.append(w)
+            if not cur.next() or cur.docid != d:
+                break
+        self.docid = d
+        self.payload = len(ws)
+        self._positions = np.asarray(ws, dtype=np.int64)
+        self._pending = not cur.exhausted
+
+    def positions(self) -> np.ndarray:
+        """Absolute word positions of the current document, ascending."""
+        return self._positions
+
+    def next(self) -> bool:
+        if self._exhausted:
+            return False
+        if not self._pending:
+            self._exhausted = True
+            return False
+        self._gather()
+        return True
+
+    def seek_geq(self, target: int) -> bool:
+        if self._exhausted:
+            return False
+        if self.docid >= target:
+            return True
+        if not self._pending or not self._cur.seek_geq(target):
+            self._exhausted = True
+            return False
+        self._gather()
+        return True
+
+    @property
+    def exhausted(self) -> bool:
+        return self._exhausted
+
+
+def word_cursor(index: DynamicIndex, term) -> WordPostingsCursor | None:
+    """Document-granular positional cursor over a word-level dynamic index
+    (None if the term is unknown)."""
+    h = index.lookup(term)
+    if h is None:
+        return None
+    return WordPostingsCursor(PostingsCursor(index.store, h))
+
+
 class ChainedCursor:
     """Concatenate cursors over disjoint, ascending docid ranges.
 
@@ -153,7 +248,9 @@ class ChainedCursor:
     StaticPostingsCursor` over the frozen tier (docids <= horizon) with a
     :class:`PostingsCursor` sought past the horizon — one DAAT cursor over
     the whole collection, same ``next``/``seek_geq`` protocol.  ``None`` and
-    initially-exhausted parts are dropped.
+    initially-exhausted parts are dropped.  When the parts are positional
+    (word-level) cursors, ``positions()`` delegates to the active part, so
+    a chained cursor is itself a valid phrase-operator input.
     """
 
     __slots__ = ("_cs", "_i", "docid", "payload", "_exhausted")
@@ -196,6 +293,10 @@ class ChainedCursor:
         self._exhausted = True
         return False
 
+    def positions(self) -> np.ndarray:
+        """Word positions of the current document (positional parts only)."""
+        return self._cs[self._i].positions()
+
     @property
     def exhausted(self) -> bool:
         return self._exhausted
@@ -229,7 +330,11 @@ def term_stats(index: DynamicIndex, term) -> TermStats:
 
 
 def conjunctive_query(index: DynamicIndex, terms) -> np.ndarray:
-    """All docids containing every query term (sorted ascending)."""
+    """All docids containing every query term (sorted ascending, unique).
+
+    Word-level indexes run the same DAAT loop over document-granular
+    :class:`WordPostingsCursor` wrappers, so the occurrence streams'
+    repeated docids never reach the intersection."""
     if not terms:
         return np.zeros(0, dtype=np.int64)
     ptrs = []
@@ -238,9 +343,11 @@ def conjunctive_query(index: DynamicIndex, terms) -> np.ndarray:
         if h is None:
             return np.zeros(0, dtype=np.int64)
         ptrs.append(h)
-    cursors = [PostingsCursor(index.store, h) for h in ptrs]
     # rarest-first ordering minimizes candidate count
-    cursors.sort(key=lambda c: index.store.get_ft(c.h_ptr * index.store.B))
+    ptrs.sort(key=lambda h: index.store.get_ft(h * index.store.B))
+    cursors = [PostingsCursor(index.store, h) for h in ptrs]
+    if index.word_level:
+        cursors = [WordPostingsCursor(c) for c in cursors]
     return conjunctive_from_cursors(cursors)
 
 
@@ -422,24 +529,61 @@ def _word_positions(index: DynamicIndex, term):
     return docids, ws
 
 
+def phrase_from_cursors(cursors) -> np.ndarray:
+    """Documents where ``cursors`` (one POSITIONAL cursor per phrase slot,
+    in phrase order) align consecutively: doc matches iff some position p
+    has cursors[i] occurring at p+i for every i.
+
+    Works over anything speaking the positional protocol —
+    :class:`WordPostingsCursor` (dynamic chains), :class:`~repro.core.
+    static_index.StaticWordCursor` (compressed tier), and
+    :class:`ChainedCursor` chains of the two — so the tiered backend
+    evaluates phrases without materializing either tier.  DAAT over docids
+    with ``seek_geq`` skipping; positions are intersected (with slot
+    offsets) only on documents containing every term.  Cursor order is
+    semantic (slot i's positions shift by i), hence no rarest-first
+    reordering here."""
+    if not cursors or any(c is None or c.exhausted for c in cursors):
+        return np.zeros(0, dtype=np.int64)
+    out = []
+    lead = cursors[0]
+    while not lead.exhausted:
+        d = lead.docid
+        ok = True
+        for c in cursors[1:]:
+            if not c.seek_geq(d):
+                return np.asarray(out, dtype=np.int64)
+            if c.docid != d:
+                ok = False
+                d = c.docid
+                break
+        if ok:
+            starts = lead.positions()
+            for i, c in enumerate(cursors[1:], start=1):
+                starts = np.intersect1d(starts, c.positions() - i,
+                                        assume_unique=True)
+                if len(starts) == 0:
+                    break
+            if len(starts):
+                out.append(d)
+            if not lead.next():
+                break
+        else:
+            if not lead.seek_geq(d):
+                break
+    return np.asarray(out, dtype=np.int64)
+
+
 def phrase_query(index: DynamicIndex, terms) -> np.ndarray:
     """Documents containing ``terms`` as a consecutive phrase (word-level
-    index required).  Positional join: doc matches iff for every i there is
-    an occurrence of terms[i] at position p0+i."""
+    index required).  One positional DAAT pass via
+    :func:`phrase_from_cursors` — repeated phrase terms get independent
+    cursors, one per slot."""
     if not index.word_level:
         raise ValueError("phrase_query needs a word-level index (§5.1)")
     if not terms:
         return np.zeros(0, dtype=np.int64)
-    d0, w0 = _word_positions(index, terms[0])
-    # candidate set: (doc, start position) pairs for the first term
-    cand = set(zip(d0.tolist(), w0.tolist()))
-    for i, t in enumerate(terms[1:], start=1):
-        di, wi = _word_positions(index, t)
-        here = set(zip(di.tolist(), (wi - i).tolist()))
-        cand &= here
-        if not cand:
-            return np.zeros(0, dtype=np.int64)
-    return np.asarray(sorted({d for d, _ in cand}), dtype=np.int64)
+    return phrase_from_cursors([word_cursor(index, t) for t in terms])
 
 
 def proximity_query(index: DynamicIndex, terms, window: int) -> np.ndarray:

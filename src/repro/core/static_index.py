@@ -25,6 +25,18 @@ time; the in-stream bit offsets are recovered from the existing 5-bit width
 headers, so the only extra stored state is one docid per block).  Interp has
 no block structure — its cursor decodes the list once and seeks by binary
 search.
+
+Word-level indexes (§5.1's ⟨d,w⟩ postings — the paper's "only a small amount
+more for word-level indexing") freeze too: each term's occurrence stream is
+regrouped into three streams — unique-docid d-gaps, per-doc position counts,
+and the flat within-doc w-gap stream — each coded under the list's codec.
+The docid stream keeps the exact doc-level block structure, so the bp128
+skip table still skips BY DOCID and ``seek_geq`` is unchanged; positions are
+decoded lazily (per 128-occurrence block) only when a phrase/proximity
+operator asks for them via :meth:`StaticWordCursor.positions`.  Under interp
+the counts are coded as strictly-increasing prefix sums (the frequency
+trick) and the w-gaps as their own prefix-sum sequence, which is strictly
+increasing because every w-gap is >= 1.
 """
 
 from __future__ import annotations
@@ -183,6 +195,13 @@ class TermList:
     the bit offset of each docid/frequency block's 5-bit width header; they
     are *derived* from the headers on first cursor use, not stored, so they
     cost no index bytes.
+
+    Word-level lists reuse the same record: ``n`` counts UNIQUE docids (so
+    docid block geometry and the skip table are identical to doc-level),
+    ``sum_f`` is the total occurrence count (= length of the w-gap stream),
+    and ``sum_w`` bounds the interp prefix-sum coding of the w-gaps.
+    ``w_bits`` / ``occ_before`` are the lazily-derived position-stream block
+    offsets and the exclusive per-docid-block occurrence prefix counts.
     """
 
     n: int
@@ -192,19 +211,25 @@ class TermList:
     d_last: np.ndarray | None = None   # (nblk,) skip table (bp128)
     d_bits: np.ndarray | None = None   # (nblk,) derived lazily
     f_bits: np.ndarray | None = None   # (nblk,) derived lazily
+    sum_w: int = 0                     # word-level: sum of all w-gaps
+    w_bits: np.ndarray | None = None   # word-level (bp128): derived lazily
+    occ_before: np.ndarray | None = None  # word-level (bp128): derived
 
 
 class StaticIndex:
-    """Frozen, maximally-compressed image of a dynamic doc-level index.
+    """Frozen, maximally-compressed image of a dynamic index.
 
-    ``epoch`` identifies the freeze generation this image belongs to (set by
-    the lifecycle's :class:`~repro.core.lifecycle.FreezeManager`; it keys the
-    serving layer's query-result cache).
+    ``word_level`` images store ⟨d,w⟩ occurrence streams (see the module
+    docstring); doc-level images store ⟨d,f⟩.  ``epoch`` identifies the
+    freeze generation this image belongs to (set by the lifecycle's
+    :class:`~repro.core.lifecycle.FreezeManager`; it keys the serving
+    layer's query-result cache).
     """
 
-    def __init__(self, codec: str = "bp128"):
+    def __init__(self, codec: str = "bp128", word_level: bool = False):
         assert codec in ("bp128", "interp")
         self.codec = codec
+        self.word_level = word_level
         self.terms: dict[bytes, int] = {}
         self.lists: list[TermList] = []
         self.num_docs = 0
@@ -215,25 +240,42 @@ class StaticIndex:
 
     @classmethod
     def freeze(cls, index: DynamicIndex, codec: str = "bp128") -> "StaticIndex":
-        if index.word_level:
-            raise ValueError("static conversion implemented for doc-level")
-        out = cls(codec)
+        """One full decode + re-encode pass over a dynamic index — the
+        paper's "fast conversion ... to a 'normal' static compressed
+        inverted index".  Word-level indexes freeze too: the decoded
+        occurrence stream (docids repeat, seconds = w-gaps) is regrouped
+        by ``add_list``."""
+        out = cls(codec, word_level=index.word_level)
         out.num_docs = index.num_docs
         for term, h_ptr in sorted(index.terms()):
-            docids, fs = index.store.decode_postings(h_ptr)
-            out.add_list(term, docids, fs)
+            docids, seconds = index.store.decode_postings(h_ptr)
+            out.add_list(term, docids, seconds)
         return out
 
-    def add_list(self, term: bytes, docids: np.ndarray, fs: np.ndarray):
+    def _empty_list(self, tb: bytes) -> None:
+        # empty and pathological lists must not crash a lifecycle swap
+        self.terms[tb] = len(self.lists)
+        self.lists.append(TermList(0, np.zeros(0, np.uint32), 0, 0,
+                                   d_last=np.zeros(0, np.int64)))
+
+    def add_list(self, term: bytes, docids: np.ndarray, seconds: np.ndarray):
+        """Append one term's full postings list.
+
+        Doc-level: ``docids`` strictly increasing, ``seconds`` = f_{t,d}.
+        Word-level: occurrence streams — ``docids`` non-decreasing (one
+        entry per occurrence) and ``seconds`` = w-gaps, exactly the shape
+        ``BlockStore.decode_postings`` returns.
+        """
         docids = np.asarray(docids, dtype=np.int64)
-        fs = np.asarray(fs, dtype=np.int64)
-        n = len(docids)
+        seconds = np.asarray(seconds, dtype=np.int64)
         tb = bytes(term)
+        if self.word_level:
+            self._add_list_word(tb, docids, seconds)
+            return
+        fs = seconds
+        n = len(docids)
         if n == 0:
-            # empty and pathological lists must not crash a lifecycle swap
-            self.terms[tb] = len(self.lists)
-            self.lists.append(TermList(0, np.zeros(0, np.uint32), 0, 0,
-                                       d_last=np.zeros(0, np.int64)))
+            self._empty_list(tb)
             return
         w = BitWriter()
         d_last = None
@@ -254,6 +296,37 @@ class StaticIndex:
                                    int(fs.sum()), d_last=d_last))
         self.num_postings += n
 
+    def _add_list_word(self, tb: bytes, docids: np.ndarray,
+                       wgaps: np.ndarray) -> None:
+        """Word-level encode: regroup the occurrence stream into unique-doc
+        d-gaps + per-doc counts + the flat w-gap stream (all >= 1)."""
+        n_occ = len(docids)
+        if n_occ == 0:
+            self._empty_list(tb)
+            return
+        # occurrence docids are non-decreasing: doc run-lengths = counts
+        udocs, counts = np.unique(docids, return_counts=True)
+        m = len(udocs)
+        w = BitWriter()
+        d_last = None
+        if self.codec == "interp":
+            interp_encode(udocs, 1, int(udocs[-1]), w)
+            csum_c = np.cumsum(counts)
+            interp_encode(csum_c + np.arange(m), 1, int(csum_c[-1]) + m, w)
+            # w-gaps are >= 1, so their prefix sums are strictly increasing
+            csum_w = np.cumsum(wgaps)
+            interp_encode(csum_w, 1, int(csum_w[-1]), w)
+        else:
+            bp_encode(np.diff(udocs, prepend=0), w)
+            bp_encode(counts, w)
+            bp_encode(wgaps, w)
+            d_last = udocs[np.minimum(
+                np.arange(BP_BLOCK - 1, m + BP_BLOCK - 1, BP_BLOCK), m - 1)]
+        self.terms[tb] = len(self.lists)
+        self.lists.append(TermList(m, w.flush(), int(udocs[-1]), n_occ,
+                                   d_last=d_last, sum_w=int(wgaps.sum())))
+        self.num_postings += n_occ
+
     # -- decode ----------------------------------------------------------
 
     def _index_of(self, term) -> int | None:
@@ -261,12 +334,18 @@ class StaticIndex:
         return self.terms.get(tb)
 
     def postings(self, term) -> tuple[np.ndarray, np.ndarray]:
+        """Full decode, mirroring ``DynamicIndex.postings`` exactly:
+        doc-level -> (docids, f); word-level -> the occurrence stream
+        (docids repeat per occurrence, seconds = w-gaps)."""
         ti = self._index_of(term)
         if ti is None:
             return np.zeros(0, np.int64), np.zeros(0, np.int64)
         rec = self.lists[ti]
         if rec.n == 0:
             return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        if self.word_level:
+            udocs, counts, wgaps = self._decode_word(rec)
+            return np.repeat(udocs, counts), wgaps
         r = BitReader(rec.words)
         n = rec.n
         if self.codec == "interp":
@@ -281,24 +360,67 @@ class StaticIndex:
         fs = bp_decode(n, r)
         return np.cumsum(gaps), fs
 
-    def ft(self, term) -> int:
+    def word_postings(self, term
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Word-level grouped decode: (unique docids, per-doc counts,
+        flat w-gap stream)."""
+        if not self.word_level:
+            raise ValueError("word_postings needs a word-level image")
         ti = self._index_of(term)
-        return self.lists[ti].n if ti is not None else 0
+        if ti is None or self.lists[ti].n == 0:
+            z = np.zeros(0, np.int64)
+            return z, z.copy(), z.copy()
+        return self._decode_word(self.lists[ti])
+
+    def _decode_word(self, rec: TermList
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        m, n_occ = rec.n, rec.sum_f
+        r = BitReader(rec.words)
+        if self.codec == "interp":
+            udocs: list = []
+            interp_decode(m, 1, rec.last_d, r, udocs)
+            shifted: list = []
+            interp_decode(m, 1, n_occ + m, r, shifted)
+            csum_c = np.asarray(shifted, dtype=np.int64) - np.arange(m)
+            counts = np.diff(csum_c, prepend=0)
+            wsums: list = []
+            interp_decode(n_occ, 1, rec.sum_w, r, wsums)
+            wgaps = np.diff(np.asarray(wsums, dtype=np.int64), prepend=0)
+            return np.asarray(udocs, dtype=np.int64), counts, wgaps
+        gaps = bp_decode(m, r)
+        counts = bp_decode(m, r)
+        wgaps = bp_decode(n_occ, r)
+        return np.cumsum(gaps), counts, wgaps
+
+    def ft(self, term) -> int:
+        """f_t with the dynamic index's semantics: documents containing the
+        term (doc-level) / total occurrences (word-level, §5.1)."""
+        ti = self._index_of(term)
+        if ti is None:
+            return 0
+        rec = self.lists[ti]
+        return rec.sum_f if self.word_level else rec.n
 
     def postings_iter(self, term) -> "StaticPostingsCursor | None":
         """A DAAT cursor over the compressed list (None if term unknown or
-        empty).  Protocol-compatible with ``core.query.PostingsCursor``."""
+        empty).  Protocol-compatible with ``core.query.PostingsCursor``;
+        word-level images return a :class:`StaticWordCursor`, which adds
+        ``positions()`` and reports per-doc occurrence counts as payload."""
         ti = self._index_of(term)
         if ti is None or self.lists[ti].n == 0:
             return None
+        if self.word_level:
+            return StaticWordCursor(self, ti)
         return StaticPostingsCursor(self, ti)
 
     # -- accounting (Table 9: "including vocabulary and other files") ----
 
     def total_bytes(self) -> int:
         postings = sum(4 * len(rec.words) for rec in self.lists)
-        # vocabulary: term bytes + (offset, n, last_d, sum_f) per term
-        vocab = sum(len(t) + 1 for t in self.terms) + 16 * len(self.lists)
+        # vocabulary: term bytes + (offset, n, last_d, sum_f) per term;
+        # word-level lists additionally store sum_w (interp bound)
+        per_term = 20 if self.word_level else 16
+        vocab = sum(len(t) + 1 for t in self.terms) + per_term * len(self.lists)
         # bp128 skip table: one stored docid per block (offsets are derived)
         skip = sum(4 * len(rec.d_last) for rec in self.lists
                    if rec.d_last is not None)
@@ -329,6 +451,39 @@ class StaticIndex:
                 off += 5 + width * cnt
         rec.d_bits, rec.f_bits = d_bits, f_bits
         return d_bits, f_bits
+
+    def _word_offsets(self, rec: TermList):
+        """bp128 word-level stream geometry: bit offsets of every docid /
+        count / w-gap block header, plus the exclusive occurrence-count
+        prefix per docid block (``occ_before``) so ``positions()`` can map a
+        (block, in-block doc) pair to its w-gap slice.  The offsets come
+        from the width headers alone; ``occ_before`` needs one decode of the
+        count blocks — done once per list, cached on the record."""
+        if rec.d_bits is not None:
+            return rec.d_bits, rec.f_bits, rec.w_bits, rec.occ_before
+        nblkd = (rec.n + BP_BLOCK - 1) // BP_BLOCK
+        nblkw = (rec.sum_f + BP_BLOCK - 1) // BP_BLOCK
+        d_bits = np.zeros(nblkd, np.int64)
+        c_bits = np.zeros(nblkd, np.int64)
+        w_bits = np.zeros(nblkw, np.int64)
+        r = BitReader(rec.words)
+        off = 0
+        for arr, total in ((d_bits, rec.n), (c_bits, rec.n),
+                           (w_bits, rec.sum_f)):
+            for j in range(len(arr)):
+                arr[j] = off
+                cnt = min(BP_BLOCK, total - j * BP_BLOCK)
+                r.pos = off
+                width = r.read(5)
+                off += 5 + width * cnt
+        occ_before = np.zeros(nblkd + 1, np.int64)
+        for j in range(nblkd):
+            cnt = min(BP_BLOCK, rec.n - j * BP_BLOCK)
+            r.pos = int(c_bits[j])
+            occ_before[j + 1] = occ_before[j] + int(bp_decode(cnt, r).sum())
+        rec.d_bits, rec.f_bits = d_bits, c_bits
+        rec.w_bits, rec.occ_before = w_bits, occ_before
+        return d_bits, c_bits, w_bits, occ_before
 
 
 class StaticPostingsCursor:
@@ -440,3 +595,88 @@ class StaticPostingsCursor:
     @property
     def exhausted(self) -> bool:
         return self._exhausted
+
+
+class StaticWordCursor(StaticPostingsCursor):
+    """DAAT cursor over one compressed word-level list.
+
+    Iterates UNIQUE docids (the shape every conjunctive/ranked consumer
+    expects), with ``payload`` = the doc's occurrence count f_{t,d}; the
+    within-doc word positions of the current document come from
+    ``positions()`` — the protocol ``core.query.WordPostingsCursor`` speaks
+    for the dynamic chains, so phrase evaluation is uniform across tiers.
+
+    ``next``/``seek_geq`` (including the skip-table block jump) are
+    inherited unchanged: the docid stream has the same 128-gap block
+    geometry as a doc-level list.  Positions are decoded lazily: one
+    128-occurrence w-gap block at a time, only when ``positions()`` is
+    called (bp128); interp decodes the whole list once, like its doc-level
+    cursor.
+    """
+
+    __slots__ = ("_c", "_ccum", "_occ0", "_wg", "_wg_blocks")
+
+    def __init__(self, static: StaticIndex, ti: int):
+        self._wg = None
+        self._wg_blocks: dict[int, np.ndarray] = {}
+        super().__init__(static, ti)
+
+    # -- block machinery (docid + count streams) -------------------------
+
+    def _load_block(self, j: int) -> None:
+        rec = self.rec
+        if self.static.codec == "interp":
+            udocs, counts, wgaps = self.static._decode_word(rec)
+            self._d = udocs
+            self._c = counts
+            self._ccum = np.cumsum(counts) - counts  # exclusive prefix
+            self._occ0 = 0
+            self._wg = wgaps
+            self._blk = 0
+            return
+        d_bits, c_bits, _w_bits, occ_before = self.static._word_offsets(rec)
+        cnt = min(BP_BLOCK, rec.n - j * BP_BLOCK)
+        r = BitReader(rec.words)
+        r.pos = int(d_bits[j])
+        gaps = bp_decode(cnt, r)
+        r.pos = int(c_bits[j])
+        counts = bp_decode(cnt, r)
+        base = int(rec.d_last[j - 1]) if j > 0 else 0
+        self._d = base + np.cumsum(gaps)
+        self._c = counts
+        self._ccum = np.cumsum(counts) - counts
+        self._occ0 = int(occ_before[j])
+        self._blk = j
+
+    def _advance_to(self, j: int, k: int) -> None:
+        self._k = k
+        self.docid = int(self._d[k])
+        self.payload = int(self._c[k])
+
+    # -- position access --------------------------------------------------
+
+    def _wgap_range(self, lo: int, hi: int) -> np.ndarray:
+        """w-gaps [lo, hi) of the flat occurrence stream (bp128: decode and
+        cache only the 128-occurrence blocks that overlap the range)."""
+        if self._wg is not None:          # interp: fully decoded
+            return self._wg[lo:hi]
+        rec = self.rec
+        _d, _c, w_bits, _o = self.static._word_offsets(rec)
+        parts = []
+        for j in range(lo // BP_BLOCK, (hi - 1) // BP_BLOCK + 1):
+            blk = self._wg_blocks.get(j)
+            if blk is None:
+                cnt = min(BP_BLOCK, rec.sum_f - j * BP_BLOCK)
+                r = BitReader(rec.words)
+                r.pos = int(w_bits[j])
+                blk = bp_decode(cnt, r)
+                self._wg_blocks[j] = blk
+            s = j * BP_BLOCK
+            parts.append(blk[max(lo - s, 0):hi - s])
+        return np.concatenate(parts)
+
+    def positions(self) -> np.ndarray:
+        """Absolute word positions of the current document, ascending
+        (cumulative sum of its w-gap slice)."""
+        lo = self._occ0 + int(self._ccum[self._k])
+        return np.cumsum(self._wgap_range(lo, lo + self.payload))

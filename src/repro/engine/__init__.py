@@ -11,8 +11,8 @@ querying — is served here through a single API:
 Four pluggable backends execute the same query semantics:
 
   * :class:`~repro.engine.backends.HostBackend` — the paper-faithful
-    cursor/TAAT code in ``core/query.py`` (always available; the only
-    backend for word-level / phrase querying);
+    cursor/TAAT code in ``core/query.py`` (always available; serves every
+    mode including word-level / phrase querying);
   * :class:`~repro.engine.device_backend.DeviceBackend` — the jnp oracle
     ``core/device_index.query_step`` over a frozen collated image plus an
     incrementally refreshed :class:`~repro.core.device_index.DeltaIndex`,

@@ -77,6 +77,16 @@ class TieredView:
     (which take any object with ``num_docs``/``postings``) therefore yields
     results byte-identical to the host backend, while the bulk of each list
     is served from its most compressed form.
+
+    Word-level engines get the same guarantees at occurrence granularity:
+    ``postings`` concatenates occurrence streams (docids repeat, payload =
+    w-gap) and ``cursor`` chains document-granular POSITIONAL cursors — a
+    :class:`~repro.core.static_index.StaticWordCursor` over the tier with a
+    :class:`~repro.core.query.WordPostingsCursor` over the suffix — so
+    phrase evaluation never materializes either tier.  A document's
+    occurrences never straddle the horizon (each document's postings are
+    written before the next document starts), which is what makes the
+    per-document position lists exact across the chain.
     """
 
     def __init__(self, engine, tier):
@@ -116,7 +126,11 @@ class TieredView:
         return np.concatenate([d1, d2]), np.concatenate([f1, f2])
 
     def cursor(self, term):
-        """One chained DAAT cursor across both tiers (None = no postings)."""
+        """One chained DAAT cursor across both tiers (None = no postings).
+
+        Word-level indexes chain positional, document-granular cursors
+        (payload = f_{t,d}, ``positions()`` live), ready for both the
+        conjunctive and the phrase operators."""
         parts = []
         if self.tier is not None:
             parts.append(self.tier.index.postings_iter(term))
@@ -125,7 +139,8 @@ class TieredView:
         if h is not None:
             c = hostq.PostingsCursor(idx.store, h)
             if self.horizon == 0 or c.seek_geq(self.horizon + 1):
-                parts.append(c)
+                parts.append(hostq.WordPostingsCursor(c)
+                             if idx.word_level else c)
         chained = hostq.ChainedCursor(parts)
         return None if chained.exhausted else chained
 
@@ -138,8 +153,11 @@ class TieredBackend(Backend):
     bp128 skip tables); ranked modes reuse the host TAAT scorers over the
     :class:`TieredView`, so idf/BM25 statistics are the live collection's —
     the same contract the device backend's frozen+delta merge enforces.
-    Works with no tier published yet (the view degenerates to the pure
-    dynamic path), so routing to it is always safe.
+    Word-level engines additionally get the ``phrase`` mode: positional
+    DAAT (:func:`~repro.core.query.phrase_from_cursors`) over chained
+    static+dynamic word cursors.  Works with no tier published yet (the
+    view degenerates to the pure dynamic path), so routing to it is always
+    safe.
     """
 
     name = "tiered"
@@ -149,11 +167,15 @@ class TieredBackend(Backend):
 
     def execute(self, query: Query) -> QueryResult:
         eng = self.engine
-        if eng.index.word_level or query.mode == "phrase":
-            raise UnsupportedQueryError(
-                "the tiered backend is doc-level (phrase/word-level queries "
-                "run on the host backend)")
         view = self.view()
+        if query.mode == "phrase":
+            if not eng.index.word_level:
+                raise UnsupportedQueryError(
+                    "phrase queries need a word-level index (§5.1)")
+            # one fresh positional cursor per phrase slot, in phrase order
+            d = hostq.phrase_from_cursors(
+                [view.cursor(t) for t in query.terms])
+            return QueryResult(d, None, self.name)
         if query.mode == "conjunctive":
             cursors = []
             for t in query.terms:

@@ -87,11 +87,9 @@ class Engine:
 
     def enable_tiering(self, policy: FreezePolicy | None = None
                        ) -> FreezeManager:
-        """Attach (or reconfigure) the static-tier lifecycle."""
-        if self.index.word_level:
-            raise ValueError("the tiered lifecycle is doc-level "
-                             "(word-level static conversion is a ROADMAP "
-                             "item)")
+        """Attach (or reconfigure) the static-tier lifecycle (doc-level and
+        word-level engines alike — word-level tiers keep positions, so
+        phrase queries serve from the compressed tier too)."""
         self.lifecycle = FreezeManager(self, policy)
         return self.lifecycle
 
@@ -213,7 +211,10 @@ class Engine:
                 q, len(queries), stats, device_capable=self.device_capable,
                 pallas_capable=self.pallas_capable,
                 tiered_available=self.static_tier() is not None,
-                tiered_capable=not self.index.word_level))
+                # the tiered backend serves every mode; phrase additionally
+                # needs word positions (as does the host path)
+                tiered_capable=(self.index.word_level
+                                if q.mode == "phrase" else True)))
         out: list[QueryResult | None] = [None] * len(queries)
         by_backend: dict[str, list[int]] = {}
         for i, p in enumerate(plans):
@@ -238,6 +239,7 @@ class Engine:
         s = self.stats_counters
         s.num_docs = self.index.num_docs
         s.num_postings = self.index.num_postings
+        s.num_words = self.index.num_words
         s.vocab_size = len(self.vocab)
         if self.lifecycle is not None:
             s.freezes = self.lifecycle.freezes

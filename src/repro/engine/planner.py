@@ -7,10 +7,12 @@ rivals execution cost.  Routing rules, in priority order:
 
 1. a forced override (``Query.backend`` or ``Engine(force_backend=...)``)
    wins unconditionally and raises if the backend can't run the query;
-2. phrase queries and word-level indexes run on the host (the only backend
-   modelling word positions); non-Const growth additionally rules out the
-   device image (device snapshots need B-addressable blocks) but NOT the
-   Pallas kernels, which decode postings host-side;
+2. word-level indexes run on the host or tiered backends (the two that
+   model word positions); phrase queries go to the tiered backend when a
+   static tier is published (positions served from the compressed ⟨d,w⟩
+   image) and to the host otherwise; non-Const growth additionally rules
+   out the device image (device snapshots need B-addressable blocks) but
+   NOT the Pallas kernels, which decode postings host-side;
 3. batches of ``device_min_batch`` or more queries go to the device image:
    batched fixed-shape execution amortizes the dispatch and the gather
    touches every query's chains in one fused program;
@@ -74,7 +76,8 @@ class Planner:
         — Pallas decodes postings host-side, so variable-block growth is
         fine, but word-level lists carry w-gap payloads and duplicate
         docids the kernels do not model).  ``tiered_capable`` reports
-        whether the tiered backend can run at all (doc-level);
+        whether the tiered backend can run THIS query (it serves both doc-
+        and word-level images; phrase queries need a word-level one);
         ``tiered_available`` whether a static tier is actually published —
         routing prefers it over the host only then, since with no tier it
         degenerates to the host path with extra indirection.
@@ -82,16 +85,20 @@ class Planner:
         cfg = self.config
         forced = query.backend or self.force_backend
         if forced is not None:
-            unsupported = (query.mode == "phrase" or
-                           (forced == "device" and not device_capable) or
-                           (forced == "pallas" and not pallas_capable) or
-                           (forced == "tiered" and not tiered_capable))
+            unsupported = (
+                (query.mode == "phrase" and forced in ("device", "pallas")) or
+                (forced == "device" and not device_capable) or
+                (forced == "pallas" and not pallas_capable) or
+                (forced == "tiered" and not tiered_capable))
             if forced in ("device", "pallas", "tiered") and unsupported:
                 raise ValueError(
                     f"backend {forced!r} forced, but {query.mode!r} queries "
-                    "on this index layout require the host backend")
+                    "on this index layout do not support it")
             return PlanDecision(forced, "forced override")
         if query.mode == "phrase":
+            if cfg.allow_tiered and tiered_capable and tiered_available:
+                return PlanDecision(
+                    "tiered", "phrase served from the compressed ⟨d,w⟩ tier")
             return PlanDecision("host", "phrase requires word positions")
         if (cfg.allow_device and device_capable
                 and batch_size >= cfg.device_min_batch):

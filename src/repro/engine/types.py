@@ -68,6 +68,7 @@ class EngineStats:
 
     num_docs: int = 0
     num_postings: int = 0
+    num_words: int = 0        # total tokens ingested (= postings, word-level)
     vocab_size: int = 0
     queries: int = 0
     collations: int = 0

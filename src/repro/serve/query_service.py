@@ -143,6 +143,13 @@ class QueryService:
         assert t.result is not None
         return t.result
 
+    def phrase(self, terms, backend: str | None = None) -> QueryResult:
+        """Synchronous phrase query over a word-level engine (served from
+        the compressed static tier when one is published; results are
+        cached under the same version/epoch key as every other mode)."""
+        return self.query(Query(terms=tuple(terms), mode="phrase",
+                                backend=backend))
+
     # -- streams --------------------------------------------------------
 
     def run_stream(self, ops) -> list[Ticket]:

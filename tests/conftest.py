@@ -4,6 +4,25 @@ see the single real device; only launch/dryrun.py forces 512 fake devices."""
 import numpy as np
 import pytest
 
+try:
+    # Hypothesis profiles (selected with --hypothesis-profile=NAME):
+    #   * ci   — deterministic (derandomize=True + a fixed example budget)
+    #            so the fast `-m "not slow"` CI job can never flake on a
+    #            fresh random draw; tier-1 runs the default randomized
+    #            profile (hypothesis's stock 100-example budget).
+    #   * dev  — bigger example budget for local property hunting.
+    # The property tests deliberately pin only deadline=None, so these
+    # profile budgets are the single knob for example counts.  Local runs
+    # without hypothesis installed simply skip the property modules (they
+    # importorskip), so this must stay optional.
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=40, derandomize=True,
+                              deadline=None)
+    settings.register_profile("dev", max_examples=200, deadline=None)
+except ImportError:  # pragma: no cover - hypothesis is optional locally
+    pass
+
 
 @pytest.fixture(scope="session")
 def zipf_docs():
@@ -22,3 +41,13 @@ def zipf_docs():
 def host_mesh():
     import jax
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def naive_phrase(docs, terms):
+    """Brute-force phrase oracle: scan raw token lists for the consecutive
+    phrase (1-based docids).  Shared by the phrase differential tests in
+    test_query.py and test_lifecycle.py so the oracle cannot drift."""
+    terms = list(terms)
+    return [i + 1 for i, d in enumerate(docs)
+            if any(list(d[j:j + len(terms)]) == terms
+                   for j in range(len(d) - len(terms) + 1))]

@@ -124,20 +124,117 @@ def test_freeze_empty_engine():
     assert r.docids.tolist() == [1]
 
 
-def test_word_level_rejects_tiering():
-    eng = Engine(B=64, growth="const", word_level=True)
-    with pytest.raises(ValueError):
-        eng.enable_tiering(FreezePolicy())
-    with pytest.raises(ValueError):
-        Engine(B=64, growth="const", word_level=True,
-               tier_policy=FreezePolicy())
+# --------------------------------------------------------------------------
+# word-level tiers: the ⟨d,w⟩ lifecycle, differential vs host (ISSUE 3)
+# --------------------------------------------------------------------------
 
 
-def test_forced_tiered_on_word_level_raises():
-    eng = Engine(B=64, growth="const", word_level=True)
+@pytest.fixture(scope="module")
+def word_stream_docs():
+    rng = np.random.default_rng(55)
+    vocab = [f"w{i}" for i in range(80)]
+    probs = 1.0 / np.arange(1, 81) ** 1.05
+    probs /= probs.sum()
+    docs = [[vocab[i] for i in rng.choice(80, size=rng.integers(4, 30),
+                                          p=probs)]
+            for _ in range(260)]
+    return vocab, docs
+
+
+from conftest import naive_phrase as _phrase_oracle  # noqa: E402
+
+
+@pytest.mark.parametrize("growth", ["const", "triangle", "expon"])
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_word_level_tiered_identical_to_host_during_freeze(
+        word_stream_docs, growth, codec):
+    """The acceptance differential at word level: every tiered result —
+    conjunctive, ranked, AND phrase — byte-identical to the host backend
+    while ingest continues and a background freeze completes mid-stream;
+    phrase results additionally pinned to a naive scan of the raw docs."""
+    vocab, docs = word_stream_docs
+    eng = Engine(B=64, growth=growth, word_level=True,
+                 tier_policy=FreezePolicy(codec=codec, background=True))
+    for d in docs[:120]:
+        eng.add_document(d)
+    rng = np.random.default_rng(9)
+
+    def check(n=3, ingested=120):
+        for _ in range(n):
+            nt = int(rng.integers(1, 4))
+            terms = tuple(vocab[i] for i in
+                          rng.choice(40, size=nt, replace=False))
+            for mode in ("conjunctive", "ranked_tfidf", "bm25"):
+                _assert_identical(eng, terms, mode)
+            pt = terms[:2]
+            rt = eng.execute(EQuery(terms=pt, mode="phrase",
+                                    backend="tiered"))
+            rh = eng.execute(EQuery(terms=pt, mode="phrase", backend="host"))
+            exp = _phrase_oracle(docs[:ingested], pt)
+            assert rt.docids.tolist() == exp, (pt,)
+            assert rh.docids.tolist() == exp, (pt,)
+
+    check()                                   # before any tier exists
+    assert eng.lifecycle.freeze(blocking=False)
+    for i, d in enumerate(docs[120:180]):
+        eng.add_document(d)
+        check(1, ingested=121 + i)
+    eng.lifecycle.wait()
+    assert eng.lifecycle.tier is not None
+    assert eng.lifecycle.tier.num_docs == 120
+    assert eng.lifecycle.tier.index.word_level
+    check(ingested=180)                       # after the swap
+    eng.lifecycle.freeze(blocking=True)       # second epoch, grown index
+    assert eng.lifecycle.tier.num_docs == eng.index.num_docs
+    for d in docs[180:220]:
+        eng.add_document(d)
+    check(ingested=220)
+    assert eng.stats().freezes == 2 and eng.stats().tier_epoch == 2
+    # word-level accounting flows through the stats plumbing
+    assert eng.stats().num_words == eng.index.num_words > 0
+    assert eng.index.num_words == eng.index.num_postings  # §5.1: 1/occurrence
+
+
+def test_word_level_policy_and_planner_routing(word_stream_docs):
+    """Policy-triggered word-level freezes; once a tier is published the
+    planner routes phrase queries to it by default."""
+    vocab, docs = word_stream_docs
+    eng = Engine(B=64, growth="const", word_level=True,
+                 tier_policy=FreezePolicy(every_docs=60, background=False))
+    before = eng.execute(EQuery(terms=(vocab[0], vocab[1]), mode="phrase"))
+    assert before.backend == "host"           # no tier yet
+    for d in docs[:130]:
+        eng.add_document(d)
+    assert eng.lifecycle.freezes == 2         # epochs at 60, 120
+    assert eng.lifecycle.tier.num_docs == 120
+    after = eng.execute(EQuery(terms=(vocab[0], vocab[1]), mode="phrase"))
+    assert after.backend == "tiered"
+    assert after.docids.tolist() == _phrase_oracle(
+        docs[:130], (vocab[0], vocab[1]))
+    _assert_identical(eng, (vocab[1], vocab[3]), "conjunctive")
+    _assert_identical(eng, (vocab[2], vocab[5]), "bm25")
+
+
+def test_word_level_static_tier_compression(word_stream_docs):
+    """The frozen ⟨d,w⟩ tier must beat the dynamic form on bytes/posting —
+    the §5 'small amount more for word-level indexing' claim."""
+    vocab, docs = word_stream_docs
+    eng = Engine(B=64, growth="const", word_level=True,
+                 tier_policy=FreezePolicy())
+    for d in docs[:200]:
+        eng.add_document(d)
+    eng.lifecycle.freeze(blocking=True)
+    tier = eng.lifecycle.tier
+    assert tier.num_postings == eng.index.num_postings
+    assert tier.index.bytes_per_posting() < eng.index.bytes_per_posting()
+    assert eng.index.stats()["num_words"] == eng.index.num_postings
+
+
+def test_forced_phrase_on_doc_level_tiered_raises():
+    eng = Engine(B=64, growth="const")       # doc-level
     eng.add_document(["x", "y"])
     with pytest.raises((ValueError, UnsupportedQueryError)):
-        eng.execute(EQuery(terms=("x",), mode="conjunctive",
+        eng.execute(EQuery(terms=("x", "y"), mode="phrase",
                            backend="tiered"))
 
 

@@ -80,3 +80,99 @@ def test_queries_interleaved_with_ingest(zipf_docs):
             terms = [doc[0], doc[min(1, len(doc) - 1)]]
             got = Q.conjunctive_query(idx, terms)
             assert idx.num_docs in got.tolist()  # the just-added doc matches
+
+
+# --------------------------------------------------------------------------
+# phrase operator vs a brute-force position scan over the raw documents,
+# across dynamic-only, static-only, and chained-tier cursors (ISSUE 3)
+# --------------------------------------------------------------------------
+
+
+from conftest import naive_phrase as _naive_phrase  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def word_corpus():
+    rng = np.random.default_rng(17)
+    vocab = [f"p{i}" for i in range(25)]
+    # small vocabulary + short docs -> dense phrase hits, including repeats
+    docs = [[vocab[i] for i in rng.integers(0, 25, rng.integers(3, 35))]
+            for _ in range(120)]
+    idx = DynamicIndex(B=48, word_level=True)
+    for d in docs:
+        idx.add_document(d)
+    return vocab, docs, idx
+
+
+def _random_phrases(vocab, rng, n=60):
+    out = []
+    for _ in range(n):
+        k = int(rng.integers(2, 5))
+        out.append([vocab[i] for i in rng.integers(0, len(vocab), k)])
+    # adversarial shapes: repeated term in the phrase, single term
+    out += [[vocab[0], vocab[0]], [vocab[1], vocab[2], vocab[1]], [vocab[3]]]
+    return out
+
+
+def test_phrase_oracle_dynamic_cursors(word_corpus):
+    vocab, docs, idx = word_corpus
+    rng = np.random.default_rng(4)
+    for terms in _random_phrases(vocab, rng):
+        got = Q.phrase_from_cursors(
+            [Q.word_cursor(idx, t) for t in terms]).tolist()
+        assert got == _naive_phrase(docs, terms), terms
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_phrase_oracle_static_cursors(word_corpus, codec):
+    from repro.core.static_index import StaticIndex
+    vocab, docs, idx = word_corpus
+    st = StaticIndex.freeze(idx, codec)
+    rng = np.random.default_rng(5)
+    for terms in _random_phrases(vocab, rng):
+        got = Q.phrase_from_cursors(
+            [st.postings_iter(t) for t in terms]).tolist()
+        assert got == _naive_phrase(docs, terms), (codec, terms)
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_phrase_oracle_chained_tier_cursors(word_corpus, codec):
+    """Static prefix + dynamic suffix chained per slot: phrase results must
+    equal the naive scan over the WHOLE collection."""
+    from repro.core.static_index import StaticIndex
+    vocab, docs, idx0 = word_corpus
+    horizon = 70
+    idx = DynamicIndex(B=48, word_level=True)
+    for d in docs[:horizon]:
+        idx.add_document(d)
+    st = StaticIndex.freeze(idx, codec)
+    for d in docs[horizon:]:
+        idx.add_document(d)
+
+    def chained(t):
+        parts = [st.postings_iter(t)]
+        h = idx.lookup(t)
+        if h is not None:
+            c = Q.PostingsCursor(idx.store, h)
+            if c.seek_geq(horizon + 1):
+                parts.append(Q.WordPostingsCursor(c))
+        c = Q.ChainedCursor(parts)
+        return None if c.exhausted else c
+
+    rng = np.random.default_rng(6)
+    for terms in _random_phrases(vocab, rng):
+        got = Q.phrase_from_cursors([chained(t) for t in terms]).tolist()
+        assert got == _naive_phrase(docs, terms), (codec, terms)
+
+
+def test_word_level_conjunctive_unique_docids(word_corpus):
+    """Word-level conjunctive must intersect DOCUMENTS, not occurrences —
+    duplicate docids in the occurrence streams never reach the output."""
+    vocab, docs, idx = word_corpus
+    rng = np.random.default_rng(8)
+    for _ in range(40):
+        terms = [vocab[i] for i in
+                 rng.choice(25, size=rng.integers(1, 4), replace=False)]
+        got = Q.conjunctive_query(idx, terms).tolist()
+        assert got == Q.brute_conjunctive(idx, terms).tolist(), terms
+        assert len(got) == len(set(got))

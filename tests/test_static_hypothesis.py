@@ -16,7 +16,7 @@ gap_lists = hst.lists(
 
 
 @pytest.mark.parametrize("codec", ["bp128", "interp"])
-@settings(max_examples=60, deadline=None)
+@settings(deadline=None)
 @given(pairs=gap_lists)
 def test_roundtrip_property(codec, pairs):
     """encode∘decode is the identity for any gap/frequency list, including
@@ -31,7 +31,7 @@ def test_roundtrip_property(codec, pairs):
 
 
 @pytest.mark.parametrize("codec", ["bp128", "interp"])
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(pairs=gap_lists, targets=hst.lists(hst.integers(0, 1 << 27),
                                           min_size=1, max_size=6))
 def test_seek_geq_property(codec, pairs, targets):
@@ -50,3 +50,75 @@ def test_seek_geq_property(codec, pairs, targets):
             assert not ok
             return
         assert ok and c.docid == int(docids[k]) and c.payload == int(fs[k])
+
+
+# --------------------------------------------------------------------------
+# word-level ⟨d,w⟩ lists (ISSUE 3): a random stream is a list of documents,
+# each a (d-gap, [w-gaps...]) pair — covering empty lists, singleton docs,
+# repeated terms (several occurrences per doc), and max-gap positions.
+# --------------------------------------------------------------------------
+
+word_lists = hst.lists(
+    hst.tuples(hst.integers(1, 1 << 24),                       # d-gap >= 1
+               hst.lists(hst.integers(1, 1 << 20),             # w-gaps >= 1
+                         min_size=1, max_size=6)),
+    min_size=0, max_size=2 * BP_BLOCK + 9)
+
+
+def _occurrence_stream(docs):
+    """Flatten [(d-gap, [w-gaps])] into the arrays add_list expects plus the
+    grouped reference shape."""
+    udocs = np.cumsum([g for g, _ in docs]).astype(np.int64)
+    occ, wgaps = [], []
+    for d, (_, ws) in zip(udocs, docs):
+        occ += [int(d)] * len(ws)
+        wgaps += ws
+    counts = np.asarray([len(ws) for _, ws in docs], np.int64)
+    return (udocs, counts, np.asarray(occ, np.int64),
+            np.asarray(wgaps, np.int64))
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+@settings(deadline=None)
+@given(docs=word_lists)
+def test_word_roundtrip_property(codec, docs):
+    """encode∘decode is the identity for any ⟨d,w⟩ occurrence stream, both
+    at occurrence granularity (postings) and grouped (word_postings)."""
+    udocs, counts, occ, wgaps = _occurrence_stream(docs)
+    st = StaticIndex(codec, word_level=True)
+    st.add_list(b"t", occ, wgaps)
+    d, w = st.postings(b"t")
+    assert d.tolist() == occ.tolist()
+    assert w.tolist() == wgaps.tolist()
+    gd, gc, gw = st.word_postings(b"t")
+    assert gd.tolist() == udocs.tolist()
+    assert gc.tolist() == counts.tolist()
+    assert gw.tolist() == wgaps.tolist()
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+@settings(deadline=None)
+@given(docs=word_lists, targets=hst.lists(hst.integers(0, 1 << 25),
+                                          min_size=1, max_size=6))
+def test_word_seek_and_positions_property(codec, docs, targets):
+    """seek_geq lands on the first doc >= target with the right occurrence
+    count, and positions() returns that doc's exact cumulative w-gaps."""
+    udocs, counts, occ, wgaps = _occurrence_stream(docs)
+    st = StaticIndex(codec, word_level=True)
+    st.add_list(b"t", occ, wgaps)
+    c = st.postings_iter(b"t")
+    if c is None:
+        assert len(udocs) == 0
+        return
+    starts = np.cumsum(counts) - counts
+    for target in sorted(targets):
+        ok = c.seek_geq(int(target))
+        k = int(np.searchsorted(udocs, target, side="left"))
+        if k >= len(udocs):
+            assert not ok
+            return
+        assert ok and c.docid == int(udocs[k])
+        assert c.payload == int(counts[k])
+        lo = int(starts[k])
+        exp = np.cumsum(wgaps[lo:lo + int(counts[k])])
+        assert c.positions().tolist() == exp.tolist()

@@ -159,5 +159,151 @@ def test_conjunctive_from_cursors_handles_missing():
     assert out.tolist() == [2, 3]
 
 
-# hypothesis round-trip property tests live in test_static_hypothesis.py —
-# a module-level importorskip would skip this whole file with them.
+# --------------------------------------------------------------------------
+# word-level ⟨d,w⟩ lists: deterministic edge cases + cursor differentials
+# (ISSUE 3; the randomized properties live in test_static_hypothesis.py)
+# --------------------------------------------------------------------------
+
+
+def _word_roundtrip(codec, occ_docids, wgaps):
+    """Encode an occurrence stream, decode it back bit-exactly."""
+    st = StaticIndex(codec, word_level=True)
+    st.add_list(b"t", np.asarray(occ_docids, np.int64),
+                np.asarray(wgaps, np.int64))
+    d, w = st.postings(b"t")
+    assert d.tolist() == list(occ_docids)
+    assert w.tolist() == list(wgaps)
+    return st
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+class TestWordEdgeLists:
+    def test_empty(self, codec):
+        st = _word_roundtrip(codec, [], [])
+        assert st.postings_iter(b"t") is None
+        assert st.ft(b"t") == 0 and st.num_postings == 0
+
+    def test_singleton_occurrence(self, codec):
+        st = _word_roundtrip(codec, [3], [7])
+        c = st.postings_iter(b"t")
+        assert (c.docid, c.payload) == (3, 1)
+        assert c.positions().tolist() == [7]
+        assert not c.next() and c.exhausted
+
+    def test_repeated_term_single_doc(self, codec):
+        # one doc, five occurrences: "a x a a y a a"-style w-gaps
+        st = _word_roundtrip(codec, [1] * 5, [1, 2, 1, 2, 1])
+        c = st.postings_iter(b"t")
+        assert (c.docid, c.payload) == (1, 5)
+        assert c.positions().tolist() == [1, 3, 4, 6, 7]
+        assert st.ft(b"t") == 5  # word-level f_t counts occurrences
+
+    def test_max_gap_positions(self, codec):
+        # docid and position gaps near the dynamic codec's practical range
+        occ = [1, 1, 1 << 22, 1 << 22]
+        wg = [1 << 20, 1 << 19, 5, 1 << 21]
+        st = _word_roundtrip(codec, occ, wg)
+        c = st.postings_iter(b"t")
+        assert c.positions().tolist() == [1 << 20, (1 << 20) + (1 << 19)]
+        assert c.seek_geq(2) and c.docid == 1 << 22
+        assert c.positions().tolist() == [5, 5 + (1 << 21)]
+
+    def test_word_freeze_matches_dynamic(self, codec, zipf_docs):
+        vocab, docs = zipf_docs
+        idx = DynamicIndex(B=64, word_level=True)
+        for d in docs[:60]:
+            idx.add_document(d)
+        st = StaticIndex.freeze(idx, codec)
+        assert st.word_level and st.num_postings == idx.num_postings
+        for t in vocab[:60]:
+            d1, w1 = idx.postings(t)
+            d2, w2 = st.postings(t)
+            assert d1.tolist() == d2.tolist()
+            assert w1.tolist() == w2.tolist()
+            assert st.ft(t) == idx.ft(t)
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_word_cursor_matches_grouped_decode(codec):
+    """Cursor iteration (unique docs, counts, lazy positions) must agree
+    with the one-shot grouped decode, across many 128-blocks."""
+    rng = np.random.default_rng(33)
+    n_docs = 3 * BP_BLOCK + 40
+    occ, wg = [], []
+    for d in np.cumsum(rng.integers(1, 6, n_docs)):
+        k = int(rng.integers(1, 5))
+        occ += [int(d)] * k
+        wg += rng.integers(1, 50, k).tolist()
+    st = _word_roundtrip(codec, occ, wg)
+    udocs, counts, wgaps = st.word_postings(b"t")
+    starts = np.cumsum(counts) - counts
+    c = st.postings_iter(b"t")
+    i = 0
+    while True:
+        assert (c.docid, c.payload) == (udocs[i], counts[i])
+        lo = int(starts[i])
+        exp = np.cumsum(wgaps[lo:lo + int(counts[i])])
+        assert c.positions().tolist() == exp.tolist()
+        i += 1
+        if not c.next():
+            break
+    assert i == len(udocs)
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_word_cursor_seek_geq_differential(codec):
+    rng = np.random.default_rng(29)
+    n_docs = 4 * BP_BLOCK
+    occ, wg = [], []
+    for d in np.cumsum(rng.integers(1, 9, n_docs)):
+        k = int(rng.integers(1, 4))
+        occ += [int(d)] * k
+        wg += rng.integers(1, 30, k).tolist()
+    st = _word_roundtrip(codec, occ, wg)
+    udocs, counts, wgaps = st.word_postings(b"t")
+    starts = np.cumsum(counts) - counts
+    for _ in range(120):
+        c = st.postings_iter(b"t")
+        for target in np.sort(rng.integers(0, int(udocs[-1]) + 15, 4)):
+            ok = c.seek_geq(int(target))
+            k = int(np.searchsorted(udocs, target, side="left"))
+            if k >= len(udocs):
+                assert not ok and c.exhausted
+                break
+            assert ok and c.docid == udocs[k] and c.payload == counts[k]
+            lo = int(starts[k])
+            exp = np.cumsum(wgaps[lo:lo + int(counts[k])])
+            assert c.positions().tolist() == exp.tolist()
+
+
+def test_word_chained_cursor_positions_span_tiers(zipf_docs):
+    """ChainedCursor(static word cursor, dynamic WordPostingsCursor) serves
+    docids, counts, AND positions identically to a pure dynamic walk."""
+    from repro.core.query import WordPostingsCursor, word_cursor
+    vocab, docs = zipf_docs
+    idx = DynamicIndex(B=64, word_level=True)
+    for d in docs[:50]:
+        idx.add_document(d)
+    st = StaticIndex.freeze(idx, "bp128")
+    horizon = idx.num_docs
+    for d in docs[50:80]:
+        idx.add_document(d)
+    for t in vocab[:40]:
+        parts = [st.postings_iter(t)]
+        h = idx.lookup(t)
+        if h is not None:
+            c = PostingsCursor(idx.store, h)
+            if c.seek_geq(horizon + 1):
+                parts.append(WordPostingsCursor(c))
+        chained = ChainedCursor(parts)
+        ref = word_cursor(idx, t)
+        if ref is None:
+            assert chained.exhausted
+            continue
+        while True:
+            assert (chained.docid, chained.payload) == (ref.docid, ref.payload)
+            assert chained.positions().tolist() == ref.positions().tolist()
+            a, b = chained.next(), ref.next()
+            assert a == b
+            if not a:
+                break
