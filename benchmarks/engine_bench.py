@@ -26,8 +26,11 @@ recording the worst query latency observed while the freeze thread ran;
 plus the **word-level** point (paper §5: two bytes per posting "and only a
 small amount more for word-level indexing"): a word-level ⟨d,w⟩ engine over
 the same corpus reports dynamic and static bytes-per-posting (= per
-occurrence) under both codecs, ``num_words``, and host-vs-tiered phrase
-query latency.  Results land in ``BENCH_engine.json``.
+occurrence) under both codecs, ``num_words``, and host-vs-tiered latency
+for every positional-cursor path — phrase, proximity (window=8), and the
+word-level ranked modes (``ranked_tfidf`` / ``bm25`` / ``bm25_prox``),
+which score through document-granular cursors since ISSUE 4.  Results land
+in ``BENCH_engine.json``.
 """
 
 from __future__ import annotations
@@ -198,6 +201,25 @@ def main() -> None:
         phrase_lat[backend] = 1e6 * secs / args.queries
         print(f"{'phrase':13s} {backend:7s} {phrase_lat[backend]:10.1f} "
               "us/query")
+    # proximity + word-level ranked (ISSUE 4): the positional-cursor paths
+    prox_lat = {}
+    for backend in ("host", "tiered"):
+        forced = [Query(terms=q.terms, mode="proximity", window=8,
+                        backend=backend) for q in phrase_qs]
+        secs = _timed(lambda: weng.execute_many(forced))
+        prox_lat[backend] = 1e6 * secs / args.queries
+        print(f"{'proximity':13s} {backend:7s} {prox_lat[backend]:10.1f} "
+              "us/query")
+    word_ranked_lat = {}
+    for mode in ("ranked_tfidf", "bm25", "bm25_prox"):
+        word_ranked_lat[mode] = {}
+        for backend in ("host", "tiered"):
+            forced = [Query(terms=q.terms, mode=mode, k=10, backend=backend)
+                      for q in phrase_qs]
+            secs = _timed(lambda: weng.execute_many(forced))
+            word_ranked_lat[mode][backend] = 1e6 * secs / args.queries
+            print(f"{'w-' + mode:13s} {backend:7s} "
+                  f"{word_ranked_lat[mode][backend]:10.1f} us/query")
     wstats = weng.index.stats()
 
     payload = {
@@ -239,6 +261,8 @@ def main() -> None:
             "static_bytes_per_posting": wtier.index.bytes_per_posting(),
             "static_bytes_per_posting_interp": word_interp_bpp,
             "phrase_us_per_query": phrase_lat,
+            "proximity_us_per_query": prox_lat,
+            "ranked_us_per_query": word_ranked_lat,
         },
     }
     with open(args.out, "w") as f:

@@ -37,6 +37,18 @@ def fnv1a(term: bytes) -> int:
     return (int(h) ^ (int(h) >> 32)) & 0xFFFFFFFF
 
 
+def group_occurrences(docids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(unique docids, run-length counts) of a non-decreasing occurrence
+    stream — the one implementation of the doc-level grouping invariant
+    (word-level postings repeat a docid once per occurrence, so the
+    run-lengths ARE the per-document f_{t,d}), shared by the dynamic index,
+    the query helpers, and the tiered view."""
+    if len(docids) == 0:
+        return docids, docids.copy()
+    udocs, counts = np.unique(docids, return_counts=True)
+    return udocs, counts.astype(np.int64)
+
+
 class DynamicIndex:
     """An immediate-access dynamic inverted index (document- or word-level)."""
 
@@ -177,6 +189,19 @@ class DynamicIndex:
         if h_ptr is None:
             return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
         return self.store.decode_postings(h_ptr)
+
+    def doc_postings(self, term):
+        """Document-granular postings: (unique docids, doc-level f_{t,d}).
+
+        Identical to :meth:`postings` on doc-level indexes; word-level
+        occurrence streams are grouped (docids are non-decreasing, so the
+        run-lengths ARE the per-doc counts).  This is the shape every
+        ranked scorer consumes — w-gaps must never be mistaken for term
+        frequencies."""
+        docids, seconds = self.postings(term)
+        if not self.word_level:
+            return docids, seconds
+        return group_occurrences(docids)
 
     def ft(self, term) -> int:
         h_ptr = self.lookup(term)

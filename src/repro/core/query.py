@@ -10,6 +10,16 @@ continues (immediate access):
         w_{t,d} = log(1 + f_{t,d}) * log(1 + N / f_t)
     tracked in a min-heap (§4.6).
 
+All ranked scorers (TF×IDF, BM25, and the position-aware ``bm25_prox``)
+consume DOCUMENT-granular statistics on word-level indexes via the
+positional cursor protocol (``WordPostingsCursor`` / ``StaticWordCursor`` /
+``ChainedCursor``): f_{t,d} is the per-document occurrence count and f_t
+the document frequency — never the §5.1 occurrence stream's w-gaps or
+occurrence totals.  Phrase and proximity operators run positional DAAT over
+the same cursors, so every mode serves identically from the dynamic chains
+and the compressed static tier.  Ranked ties follow one canonical order
+everywhere: higher score first, then lower docid.
+
 A vectorized term-at-a-time scorer and a brute-force oracle are included for
 benchmarks and tests.
 
@@ -30,7 +40,7 @@ import numpy as np
 
 from .blockstore import H, BlockStore
 from .dvbyte import dvbyte_decode_from
-from .index import DynamicIndex
+from .index import DynamicIndex, group_occurrences
 
 
 class PostingsCursor:
@@ -241,6 +251,30 @@ def word_cursor(index: DynamicIndex, term) -> WordPostingsCursor | None:
     return WordPostingsCursor(PostingsCursor(index.store, h))
 
 
+def doc_cursor(index: DynamicIndex, term):
+    """Document-granular DAAT cursor over any dynamic index: the raw
+    :class:`PostingsCursor` for doc-level chains, the
+    :class:`WordPostingsCursor` wrapper for word-level ones — so ``payload``
+    is f_{t,d} in both cases (None if the term is unknown)."""
+    h = index.lookup(term)
+    if h is None:
+        return None
+    c = PostingsCursor(index.store, h)
+    return WordPostingsCursor(c) if index.word_level else c
+
+
+def positional_cursor(index, term):
+    """Document-granular POSITIONAL cursor over ``index``: a tiered view's
+    chained static+dynamic cursor when the object provides ``cursor``
+    (:class:`~repro.engine.backends.TieredView`), else a dynamic
+    :func:`word_cursor`.  The uniform entry point of the proximity and
+    position-aware ranked operators."""
+    factory = getattr(index, "cursor", None)
+    if factory is not None:
+        return factory(term)
+    return word_cursor(index, term)
+
+
 class ChainedCursor:
     """Concatenate cursors over disjoint, ascending docid ranges.
 
@@ -324,6 +358,35 @@ def term_stats(index: DynamicIndex, term) -> TermStats:
                      sum(1 for _ in store.chain_slots(h_ptr)))
 
 
+def doc_ft(index, term) -> int:
+    """Document frequency |{d : t ∈ d}| — the f_t every ranked scorer needs.
+
+    Doc-level indexes read it from the head block (their stored f_t already
+    counts documents); word-level chains store one posting per OCCURRENCE
+    (§5.1), so their stored f_t is an occurrence count and the document
+    frequency must be recovered by counting unique docids (one decode pass
+    — dynamic chains have no cheaper document-granular statistic)."""
+    if not getattr(index, "word_level", False):
+        return index.ft(term)
+    docids, _ = _doc_level_postings(index, term)
+    return len(docids)
+
+
+def _doc_level_postings(index, term):
+    """(unique docids, doc-level f_{t,d}) — uniform over doc- and word-level
+    indexes, and over index-like views.  Prefers the object's own
+    ``doc_postings`` (DynamicIndex, StaticIndex, TieredView — the tiered
+    view serves the frozen prefix from the compressed ⟨d,w⟩ image without
+    touching positions); otherwise groups the raw occurrence stream."""
+    grouped = getattr(index, "doc_postings", None)
+    if grouped is not None:
+        return grouped(term)
+    docids, seconds = index.postings(term)
+    if not getattr(index, "word_level", False):
+        return docids, seconds
+    return group_occurrences(docids)
+
+
 # --------------------------------------------------------------------------
 # conjunctive Boolean (DAAT with skipping)
 # --------------------------------------------------------------------------
@@ -389,24 +452,43 @@ def tfidf_weight(f_td: np.ndarray, f_t: int, N: int) -> np.ndarray:
     return np.log1p(f_td) * np.log1p(N / f_t)
 
 
+def _topk_by_score(scores: np.ndarray, k: int):
+    """Top-k of a dense score accumulator under the canonical tie order:
+    higher score first, then LOWER docid.  One lexsort over the nonzero
+    candidates — selection and ordering share the same comparator, so the
+    DAAT heap, the TAAT scorers, and the tiered backend can never disagree
+    on which documents sit at a tied k boundary."""
+    nz = np.flatnonzero(scores)
+    order = np.lexsort((nz, -scores[nz]))[:k]
+    top = nz[order]
+    return top.astype(np.int64), scores[top]
+
+
 def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10):
     """DAAT top-k with a min-heap of "best seen so far" (paper §4.6).
 
-    Returns (docids, scores) sorted by descending score.
+    Runs over DOCUMENT-granular cursors (:func:`doc_cursor`), so on
+    word-level indexes ``payload`` is f_{t,d} — never a w-gap — and the idf
+    uses the true document frequency (:func:`doc_ft`), not the §5.1
+    occurrence count.  Ties at the k boundary follow the canonical order
+    (higher score, then lower docid): the heap compares full ``(score, -d)``
+    tuples, which is exactly that order inverted.
+
+    Returns (docids, scores) sorted by descending score, docid ascending
+    within ties.
     """
     N = index.num_docs
     cursors = []
     idfs = []
     for t in terms:
-        h = index.lookup(t)
-        if h is None:
+        c = doc_cursor(index, t)
+        if c is None:
             continue
-        c = PostingsCursor(index.store, h)
         cursors.append(c)
-        idfs.append(np.log1p(N / index.store.get_ft(h * index.store.B)))
+        idfs.append(np.log1p(N / doc_ft(index, t)))
     if not cursors:
         return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
-    heap: list[tuple[float, int]] = []  # (score, docid) min-heap
+    heap: list[tuple[float, int]] = []  # (score, -docid) min-heap
     while True:
         # candidate = min current docid among live cursors
         live = [c for c in cursors if not c.exhausted]
@@ -420,38 +502,36 @@ def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10):
                 c.next()
         if len(heap) < k:
             heapq.heappush(heap, (score, -d))
-        elif score > heap[0][0]:
+        elif (score, -d) > heap[0]:
             heapq.heapreplace(heap, (score, -d))
     items = sorted(heap, key=lambda x: (-x[0], -x[1]))
     return (np.asarray([-d for _, d in items], dtype=np.int64),
             np.asarray([s for s, _ in items], dtype=np.float64))
 
 
-def ranked_disjunctive_taat(index: DynamicIndex, terms, k: int = 10):
+def ranked_disjunctive_taat(index, terms, k: int = 10):
     """Vectorized term-at-a-time scorer (identical results, numpy-fast).
 
     The paper notes (§4.2) TAAT shares the document-sorted index requirement,
     so this is a legitimate execution strategy over the same structure.
+    Accepts any index-like with ``num_docs`` + postings access (DynamicIndex,
+    TieredView, sharded fan-outs); word-level indexes are scored through
+    :func:`_doc_level_postings`, so f_{t,d}/f_t are document-level — the
+    occurrence stream's repeated docids and w-gap payloads never reach the
+    accumulator.
     """
     N = index.num_docs
     scores = np.zeros(N + 1, dtype=np.float64)
     touched = False
     for t in terms:
-        docids, fs = index.postings(t)
+        docids, fs = _doc_level_postings(index, t)
         if len(docids) == 0:
             continue
         touched = True
         scores[docids] += tfidf_weight(fs, len(docids), N)
     if not touched:
         return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
-    nz = np.flatnonzero(scores)
-    if len(nz) > k:
-        top = nz[np.argpartition(scores[nz], -k)[-k:]]
-    else:
-        top = nz
-    order = np.lexsort((-top, scores[top]))[::-1]
-    top = top[order]
-    return top.astype(np.int64), scores[top]
+    return _topk_by_score(scores, k)
 
 
 # --------------------------------------------------------------------------
@@ -489,44 +569,31 @@ def bm25_weight(f_td, doclen, avg_len, f_t, N, k1=0.9, b=0.4):
     return idf * tf
 
 
-def ranked_bm25(index: DynamicIndex, terms, doclens: np.ndarray,
+def ranked_bm25(index, terms, doclens: np.ndarray,
                 k: int = 10, k1: float = 0.9, b: float = 0.4):
-    """Top-k BM25 over the dynamic index (TAAT; doclens is 1-indexed via
-    position 0 padding).  Returns (docids, scores) by descending score."""
+    """Top-k BM25 (TAAT; doclens is 1-indexed via position 0 padding).
+
+    Like :func:`ranked_disjunctive_taat`, accepts any index-like and scores
+    word-level indexes through document-granular postings, so f_{t,d} and
+    f_t are doc-level everywhere.  Returns (docids, scores) by descending
+    score, docid ascending within ties."""
     N = index.num_docs
     avg = float(doclens[1:N + 1].mean()) if N else 0.0
     scores = np.zeros(N + 1, dtype=np.float64)
     for t in terms:
-        docids, fs = index.postings(t)
+        docids, fs = _doc_level_postings(index, t)
         if len(docids) == 0:
             continue
         scores[docids] += bm25_weight(
             fs.astype(np.float64), doclens[docids], avg, len(docids), N,
             k1, b)
-    nz = np.flatnonzero(scores)
-    if len(nz) > k:
-        nz = nz[np.argpartition(scores[nz], -k)[-k:]]
-    order = np.argsort(-scores[nz], kind="stable")
-    top = nz[order]
-    return top.astype(np.int64), scores[top]
+    return _topk_by_score(scores, k)
 
 
 # --------------------------------------------------------------------------
 # phrase querying over the word-level index (the paper's §1.1 motivation
 # for word-level postings: "to support phrase or proximity querying modes")
 # --------------------------------------------------------------------------
-
-
-def _word_positions(index: DynamicIndex, term):
-    """(docids, absolute word positions) for a word-level index term."""
-    docids, wgaps = index.postings(term)
-    ws = np.empty(len(docids), dtype=np.int64)
-    last: dict[int, int] = {}
-    for i, (d, wg) in enumerate(zip(docids, wgaps)):
-        w = last.get(int(d), 0) + int(wg)
-        last[int(d)] = w
-        ws[i] = w
-    return docids, ws
 
 
 def phrase_from_cursors(cursors) -> np.ndarray:
@@ -586,42 +653,186 @@ def phrase_query(index: DynamicIndex, terms) -> np.ndarray:
     return phrase_from_cursors([word_cursor(index, t) for t in terms])
 
 
-def proximity_query(index: DynamicIndex, terms, window: int) -> np.ndarray:
-    """Documents where all terms co-occur within ``window`` words."""
-    if not index.word_level:
-        raise ValueError("proximity_query needs a word-level index")
-    per_doc: dict[int, list[np.ndarray]] = {}
-    for t in terms:
-        di, wi = _word_positions(index, t)
-        by_doc: dict[int, list[int]] = {}
-        for d, w in zip(di.tolist(), wi.tolist()):
-            by_doc.setdefault(d, []).append(w)
-        for d, ws in by_doc.items():
-            per_doc.setdefault(d, []).append(np.asarray(ws))
+# --------------------------------------------------------------------------
+# proximity querying (§1.1's "phrase or proximity querying modes"): DAAT over
+# the positional cursor protocol — no wholesale decode of any tier
+# --------------------------------------------------------------------------
+
+
+def _window_match(pos_lists, counts, window: int) -> bool:
+    """True iff some window of span <= ``window`` contains >= counts[i]
+    DISTINCT positions of term i for every i — the injective-binding
+    semantics for repeated query terms (a doc with one occurrence of "a"
+    must NOT match the query ["a", "a"]).  Two-pointer sweep over the
+    merged position list: the maximal window ending at each rightmost
+    occurrence dominates every sub-window, so the sweep is complete."""
+    positions = np.concatenate(pos_lists)
+    labels = np.concatenate(
+        [np.full(len(ws), i) for i, ws in enumerate(pos_lists)])
+    order = np.argsort(positions, kind="stable")
+    positions, labels = positions[order], labels[order]
+    have = [0] * len(pos_lists)
+    satisfied = 0
+    left = 0
+    for right in range(len(positions)):
+        lr = labels[right]
+        have[lr] += 1
+        if have[lr] == counts[lr]:
+            satisfied += 1
+        while positions[right] - positions[left] > window:
+            ll = labels[left]
+            if have[ll] == counts[ll]:
+                satisfied -= 1
+            have[ll] -= 1
+            left += 1
+        if satisfied == len(pos_lists):
+            return True
+    return False
+
+
+def proximity_from_cursors(cursors, window: int, counts=None) -> np.ndarray:
+    """Documents where the cursors' terms co-occur within ``window`` words.
+
+    One POSITIONAL document-granular cursor per UNIQUE query term;
+    ``counts[i]`` is that term's multiplicity in the query — a match must
+    bind that many DISTINCT positions of it inside one window.  Like
+    :func:`phrase_from_cursors`, works over anything speaking the
+    positional protocol (``WordPostingsCursor``, ``StaticWordCursor``,
+    ``ChainedCursor``), so the tiered backend evaluates proximity without
+    materializing either tier: DAAT over docids with ``seek_geq`` skipping,
+    positions touched only on documents containing every term."""
+    if counts is None:
+        counts = [1] * len(cursors)
+    if not cursors or any(c is None or c.exhausted for c in cursors):
+        return np.zeros(0, dtype=np.int64)
     out = []
-    for d, lists in per_doc.items():
-        if len(lists) != len(terms):
-            continue
-        # exact sliding-window sweep over the merged position list
-        positions = np.concatenate(lists)
-        labels = np.concatenate(
-            [np.full(len(ws), i) for i, ws in enumerate(lists)])
-        order = np.argsort(positions)
-        positions, labels = positions[order], labels[order]
-        need = len(terms)
-        seen: dict[int, int] = {}
-        left = 0
-        found = False
-        for right in range(len(positions)):
-            seen[labels[right]] = seen.get(labels[right], 0) + 1
-            while positions[right] - positions[left] > window:
-                seen[labels[left]] -= 1
-                if seen[labels[left]] == 0:
-                    del seen[labels[left]]
-                left += 1
-            if len(seen) == need:
-                found = True
+    lead = cursors[0]
+    while not lead.exhausted:
+        d = lead.docid
+        ok = True
+        for c in cursors[1:]:
+            if not c.seek_geq(d):
+                return np.asarray(out, dtype=np.int64)
+            if c.docid != d:
+                ok = False
+                d = c.docid
                 break
-        if found:
-            out.append(d)
-    return np.asarray(sorted(out), dtype=np.int64)
+        if ok:
+            # payload = f_{t,d}: a doc lacking m occurrences can't bind them
+            if (all(c.payload >= m for c, m in zip(cursors, counts))
+                    and _window_match([c.positions() for c in cursors],
+                                      counts, window)):
+                out.append(d)
+            if not lead.next():
+                break
+        else:
+            if not lead.seek_geq(d):
+                break
+    return np.asarray(out, dtype=np.int64)
+
+
+def proximity_query(index, terms, window: int) -> np.ndarray:
+    """Documents where all ``terms`` co-occur within ``window`` words
+    (word-level index required; repeated terms bind distinct positions).
+    Accepts a DynamicIndex or a tiered view (anything
+    :func:`positional_cursor` serves)."""
+    if not getattr(index, "word_level", False):
+        raise ValueError("proximity_query needs a word-level index")
+    if not terms:
+        return np.zeros(0, dtype=np.int64)
+    need: dict = {}
+    for t in terms:
+        need[t] = need.get(t, 0) + 1
+    items = list(need.items())
+    ft = getattr(index, "ft", None)
+    if ft is not None:
+        # unlike phrase, proximity is term-order-symmetric: lead with the
+        # rarest term so the DAAT loop skips instead of enumerating the
+        # most common term's documents (f_t is an O(1) head-block read on
+        # the dynamic index, an engine counter on the tiered view)
+        items.sort(key=lambda kv: ft(kv[0]))
+    return proximity_from_cursors(
+        [positional_cursor(index, t) for t, _ in items],
+        window, [m for _, m in items])
+
+
+# --------------------------------------------------------------------------
+# position-aware ranked querying: BM25 + MinDist proximity bonus (Tao & Zhai
+# 2007, "An exploration of proximity measures in information retrieval") —
+# the §5.1 payoff for carrying word positions into the ranked path
+# --------------------------------------------------------------------------
+
+
+def min_pair_dist(pos_lists):
+    """Minimum |p - q| over occurrences p, q of two DIFFERENT terms, or
+    None when fewer than two of the lists are non-empty.  The closest
+    cross-term pair is always adjacent in the merged position order (any
+    position between them would form a closer pair with one end), so one
+    linear scan over the merge suffices."""
+    lists = [p for p in pos_lists if p is not None and len(p)]
+    if len(lists) < 2:
+        return None
+    positions = np.concatenate(lists)
+    labels = np.concatenate(
+        [np.full(len(p), i) for i, p in enumerate(lists)])
+    order = np.argsort(positions, kind="stable")
+    positions, labels = positions[order], labels[order]
+    gaps = np.diff(positions)[labels[1:] != labels[:-1]]
+    return int(gaps.min()) if len(gaps) else None
+
+
+def ranked_bm25_prox(index, terms, doclens: np.ndarray, k: int = 10,
+                     k1: float = 0.9, b: float = 0.4, alpha: float = 1.0):
+    """Position-aware top-k: BM25 plus the MinDist additive term —
+
+        score(d) = BM25(d) + ln(alpha + exp(-delta(d)))
+
+    where delta(d) is the minimum distance between occurrences of two
+    DISTINCT query terms in d (delta = +inf, i.e. bonus = ln(alpha), when
+    fewer than two distinct terms are present; the default alpha = 1 makes
+    that bonus exactly 0).  Word-level only — the whole point is consuming
+    positions on the ranked path.  Evaluated through the document-granular
+    positional cursors (:func:`positional_cursor`), so a TieredView serves
+    it from the compressed ⟨d,w⟩ tier byte-identically to the host path.
+    Returns (docids, scores) by descending score, docid ascending on ties.
+    """
+    if not getattr(index, "word_level", False):
+        raise ValueError("ranked_bm25_prox needs a word-level index")
+    N = index.num_docs
+    avg = float(doclens[1:N + 1].mean()) if N else 0.0
+    # pass 1 — the plain BM25 TAAT accumulation over doc-level postings
+    # (the tiered view's doc_postings never touches the w-gap stream)
+    uniq = list(dict.fromkeys(terms))
+    gathered = {t: _doc_level_postings(index, t) for t in uniq}
+    scores = np.zeros(N + 1, dtype=np.float64)
+    for t in terms:  # repeated query terms contribute per slot, as in BM25
+        ds, fs = gathered[t]
+        if len(ds) == 0:
+            continue
+        scores[ds] += bm25_weight(fs.astype(np.float64), doclens[ds], avg,
+                                  len(ds), N, k1, b)
+    # pass 2 — positions only where the bonus can be nonzero: docs holding
+    # >= 2 distinct query terms, visited by a fresh seek_geq-skipping
+    # positional cursor (lazy ⟨d,w⟩ block decode on the static tier)
+    present = np.zeros(N + 1, dtype=np.int64)
+    for t in uniq:
+        present[gathered[t][0]] += 1
+    multi = np.flatnonzero(present >= 2)
+    pos_of: dict = {t: {} for t in uniq}
+    for t in uniq:
+        need = multi[np.isin(multi, gathered[t][0], assume_unique=True)]
+        if len(need) == 0:
+            continue
+        c = positional_cursor(index, t)
+        for d in need:  # ascending, and every d is in the term's list
+            c.seek_geq(int(d))
+            pos_of[t][int(d)] = c.positions()
+    # every matched doc gets exactly one bonus addition: ln(alpha) when
+    # fewer than two distinct terms are present (delta = +inf), else the
+    # full MinDist term — BM25 weights are > 0, so multi ⊆ nonzero
+    nz = np.flatnonzero(scores)
+    scores[nz[present[nz] < 2]] += np.log(alpha)
+    for d in multi:
+        delta = min_pair_dist([pos_of[t].get(int(d)) for t in uniq])
+        scores[d] += np.log(alpha + np.exp(-float(delta)))
+    return _topk_by_score(scores, k)

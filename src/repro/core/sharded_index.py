@@ -241,12 +241,14 @@ class ShardedEngine:
             shard_res = [per_shard[s][qi] for s in range(len(self.engines))]
             gids = np.concatenate([self._globalize(s, r.docids)
                                    for s, r in enumerate(shard_res)])
-            if q.mode in ("conjunctive", "phrase"):
+            if q.mode in ("conjunctive", "phrase", "proximity"):
                 out.append(QueryResult(np.sort(gids), None,
                                        shard_res[0].backend, "sharded"))
             else:
                 scores = np.concatenate([r.scores for r in shard_res])
-                order = np.argsort(-scores, kind="stable")[:q.k]
+                # canonical ranked tie order across shards: higher score
+                # first, then lower GLOBAL docid (not shard arrival order)
+                order = np.lexsort((gids, -scores))[:q.k]
                 out.append(QueryResult(gids[order], scores[order],
                                        shard_res[0].backend, "sharded"))
         return out

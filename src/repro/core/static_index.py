@@ -372,25 +372,52 @@ class StaticIndex:
             return z, z.copy(), z.copy()
         return self._decode_word(self.lists[ti])
 
-    def _decode_word(self, rec: TermList
-                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        m, n_occ = rec.n, rec.sum_f
-        r = BitReader(rec.words)
+    def _decode_word_docs(self, rec: TermList, r: BitReader
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Decode the docid + count streams of a word-level list — the
+        shared layout prefix under both codecs — leaving ``r`` positioned
+        at the start of the w-gap stream."""
+        m = rec.n
         if self.codec == "interp":
             udocs: list = []
             interp_decode(m, 1, rec.last_d, r, udocs)
             shifted: list = []
-            interp_decode(m, 1, n_occ + m, r, shifted)
+            interp_decode(m, 1, rec.sum_f + m, r, shifted)
             csum_c = np.asarray(shifted, dtype=np.int64) - np.arange(m)
-            counts = np.diff(csum_c, prepend=0)
+            return np.asarray(udocs, dtype=np.int64), np.diff(csum_c,
+                                                              prepend=0)
+        gaps = bp_decode(m, r)
+        counts = bp_decode(m, r)
+        return np.cumsum(gaps), counts
+
+    def _decode_word(self, rec: TermList
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        n_occ = rec.sum_f
+        r = BitReader(rec.words)
+        udocs, counts = self._decode_word_docs(rec, r)
+        if self.codec == "interp":
             wsums: list = []
             interp_decode(n_occ, 1, rec.sum_w, r, wsums)
             wgaps = np.diff(np.asarray(wsums, dtype=np.int64), prepend=0)
-            return np.asarray(udocs, dtype=np.int64), counts, wgaps
-        gaps = bp_decode(m, r)
-        counts = bp_decode(m, r)
-        wgaps = bp_decode(n_occ, r)
-        return np.cumsum(gaps), counts, wgaps
+        else:
+            wgaps = bp_decode(n_occ, r)
+        return udocs, counts, wgaps
+
+    def doc_postings(self, term) -> tuple[np.ndarray, np.ndarray]:
+        """Document-granular postings: (unique docids, doc-level f_{t,d}).
+
+        The ranked serving path: word-level lists decode ONLY the docid and
+        count streams (they are laid out ahead of the w-gap stream under
+        both codecs), so scoring a term never pays for its positions."""
+        ti = self._index_of(term)
+        if ti is None:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        rec = self.lists[ti]
+        if rec.n == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        if not self.word_level:
+            return self.postings(term)
+        return self._decode_word_docs(rec, BitReader(rec.words))
 
     def ft(self, term) -> int:
         """f_t with the dynamic index's semantics: documents containing the

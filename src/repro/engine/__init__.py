@@ -42,11 +42,12 @@ from .backends import (
 from .device_backend import DeviceBackend
 from .engine import Engine
 from .planner import PlanDecision, Planner, PlannerConfig
-from .types import Query, QueryResult
+from .types import MODES, POSITIONAL_MODES, Query, QueryResult
 
 __all__ = [
     "Engine", "Query", "QueryResult", "Planner", "PlannerConfig",
     "PlanDecision", "HostBackend", "DeviceBackend", "PallasBackend",
     "TieredBackend", "UnsupportedQueryError",
     "FreezeManager", "FreezePolicy", "StaticTier",
+    "MODES", "POSITIONAL_MODES",
 ]

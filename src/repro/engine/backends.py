@@ -14,6 +14,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..core import query as hostq
+from ..core.index import group_occurrences
 from ..kernels import registry
 from .types import Query, QueryResult
 
@@ -62,6 +63,19 @@ class HostBackend(Backend):
                     "phrase queries need a word-level index (§5.1)")
             d = hostq.phrase_query(idx, query.terms)
             return QueryResult(d, None, self.name)
+        if query.mode == "proximity":
+            if not idx.word_level:
+                raise UnsupportedQueryError(
+                    "proximity queries need a word-level index (§5.1)")
+            d = hostq.proximity_query(idx, query.terms, query.window)
+            return QueryResult(d, None, self.name)
+        if query.mode == "bm25_prox":
+            if not idx.word_level:
+                raise UnsupportedQueryError(
+                    "bm25_prox queries need a word-level index (§5.1)")
+            d, s = hostq.ranked_bm25_prox(idx, query.terms,
+                                          eng.doclens_array(), k=query.k)
+            return QueryResult(d, s, self.name)
         raise UnsupportedQueryError(f"unknown mode {query.mode!r}")
 
 
@@ -98,6 +112,17 @@ class TieredView:
     def num_docs(self) -> int:
         return self.engine.index.num_docs
 
+    @property
+    def word_level(self) -> bool:
+        return self.engine.index.word_level
+
+    def ft(self, term) -> int:
+        """f_t with the dynamic index's semantics, from the engine's O(1)
+        global counters (operator-ordering heuristics, e.g. the proximity
+        rarest-first lead, read this — never a chain walk)."""
+        tid = self.engine.term_id(term)
+        return self.engine._fts[tid] if tid is not None else 0
+
     def suffix_postings(self, term) -> tuple[np.ndarray, np.ndarray]:
         """Dynamic postings with docid > horizon (cursor-skipped prefix)."""
         idx = self.engine.index
@@ -121,6 +146,27 @@ class TieredView:
         if self.tier is None:
             return d2, f2
         d1, f1 = self.tier.index.postings(term)
+        if len(d1) == 0:
+            return d2, f2
+        return np.concatenate([d1, d2]), np.concatenate([f1, f2])
+
+    def doc_postings(self, term) -> tuple[np.ndarray, np.ndarray]:
+        """Document-granular postings across both tiers: (unique docids,
+        doc-level f_{t,d}) — what the ranked scorers consume.
+
+        The frozen prefix comes from ``StaticIndex.doc_postings`` (docid +
+        count streams only; the w-gap stream is never decoded), the suffix
+        from grouping the cursor-skipped occurrence stream of
+        ``suffix_postings``.  Documents never straddle the horizon, so
+        concatenation is exact — identical arrays to grouping the full
+        dynamic stream."""
+        if not self.engine.index.word_level:
+            return self.postings(term)
+        docc, _wg = self.suffix_postings(term)
+        d2, f2 = group_occurrences(docc)
+        if self.tier is None:
+            return d2, f2
+        d1, f1 = self.tier.index.doc_postings(term)
         if len(d1) == 0:
             return d2, f2
         return np.concatenate([d1, d2]), np.concatenate([f1, f2])
@@ -151,13 +197,14 @@ class TieredBackend(Backend):
     Boolean conjunctive runs DAAT over :class:`~repro.core.query.
     ChainedCursor`s (seek_GEQ skipping inside the compressed tier via its
     bp128 skip tables); ranked modes reuse the host TAAT scorers over the
-    :class:`TieredView`, so idf/BM25 statistics are the live collection's —
-    the same contract the device backend's frozen+delta merge enforces.
-    Word-level engines additionally get the ``phrase`` mode: positional
-    DAAT (:func:`~repro.core.query.phrase_from_cursors`) over chained
-    static+dynamic word cursors.  Works with no tier published yet (the
-    view degenerates to the pure dynamic path), so routing to it is always
-    safe.
+    :class:`TieredView` (document-granular via ``doc_postings``, so
+    word-level f_{t,d}/f_t are doc-level and idf/BM25 statistics are the
+    live collection's — the same contract the device backend's frozen+delta
+    merge enforces).  Word-level engines additionally get the positional
+    modes: ``phrase`` and ``proximity`` run positional DAAT over chained
+    static+dynamic word cursors, ``bm25_prox`` scores BM25 + MinDist
+    through the same cursors.  Works with no tier published yet (the view
+    degenerates to the pure dynamic path), so routing to it is always safe.
     """
 
     name = "tiered"
@@ -168,14 +215,24 @@ class TieredBackend(Backend):
     def execute(self, query: Query) -> QueryResult:
         eng = self.engine
         view = self.view()
+        if query.mode in ("phrase", "proximity", "bm25_prox") \
+                and not eng.index.word_level:
+            raise UnsupportedQueryError(
+                f"{query.mode} queries need a word-level index (§5.1)")
         if query.mode == "phrase":
-            if not eng.index.word_level:
-                raise UnsupportedQueryError(
-                    "phrase queries need a word-level index (§5.1)")
             # one fresh positional cursor per phrase slot, in phrase order
             d = hostq.phrase_from_cursors(
                 [view.cursor(t) for t in query.terms])
             return QueryResult(d, None, self.name)
+        if query.mode == "proximity":
+            # one positional cursor per UNIQUE term + its multiplicity:
+            # repeated query terms must bind distinct positions
+            d = hostq.proximity_query(view, query.terms, query.window)
+            return QueryResult(d, None, self.name)
+        if query.mode == "bm25_prox":
+            d, s = hostq.ranked_bm25_prox(view, query.terms,
+                                          eng.doclens_array(), k=query.k)
+            return QueryResult(d, s, self.name)
         if query.mode == "conjunctive":
             cursors = []
             for t in query.terms:

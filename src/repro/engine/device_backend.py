@@ -35,7 +35,7 @@ from ..core.device_index import (
     with_global_stats,
 )
 from .backends import Backend, UnsupportedQueryError
-from .types import Query, QueryResult
+from .types import POSITIONAL_MODES, Query, QueryResult
 
 
 def _pow2(n: int, floor: int = 1) -> int:
@@ -141,9 +141,9 @@ class DeviceBackend(Backend):
         return self.execute_many([query])[0]
 
     def execute_many(self, queries: list[Query]) -> list[QueryResult]:
-        if any(q.mode == "phrase" for q in queries):
+        if any(q.mode in POSITIONAL_MODES for q in queries):
             raise UnsupportedQueryError(
-                "DeviceBackend does not implement phrase queries")
+                "DeviceBackend does not implement positional query modes")
         self.refresh()
         out: list[QueryResult | None] = [None] * len(queries)
         groups: dict[tuple[str, int], list[int]] = {}

@@ -23,7 +23,7 @@ from .backends import (
 )
 from .device_backend import DeviceBackend
 from .planner import Planner, PlannerConfig
-from .types import EngineStats, Query, QueryResult
+from .types import POSITIONAL_MODES, EngineStats, Query, QueryResult
 
 
 class Engine:
@@ -211,10 +211,10 @@ class Engine:
                 q, len(queries), stats, device_capable=self.device_capable,
                 pallas_capable=self.pallas_capable,
                 tiered_available=self.static_tier() is not None,
-                # the tiered backend serves every mode; phrase additionally
-                # needs word positions (as does the host path)
+                # the tiered backend serves every mode; positional modes
+                # additionally need word positions (as does the host path)
                 tiered_capable=(self.index.word_level
-                                if q.mode == "phrase" else True)))
+                                if q.mode in POSITIONAL_MODES else True)))
         out: list[QueryResult | None] = [None] * len(queries)
         by_backend: dict[str, list[int]] = {}
         for i, p in enumerate(plans):

@@ -8,11 +8,12 @@ rivals execution cost.  Routing rules, in priority order:
 1. a forced override (``Query.backend`` or ``Engine(force_backend=...)``)
    wins unconditionally and raises if the backend can't run the query;
 2. word-level indexes run on the host or tiered backends (the two that
-   model word positions); phrase queries go to the tiered backend when a
-   static tier is published (positions served from the compressed ⟨d,w⟩
-   image) and to the host otherwise; non-Const growth additionally rules
-   out the device image (device snapshots need B-addressable blocks) but
-   NOT the Pallas kernels, which decode postings host-side;
+   model word positions); positional modes (phrase / proximity /
+   bm25_prox) go to the tiered backend when a static tier is published
+   (positions served from the compressed ⟨d,w⟩ image) and to the host
+   otherwise; non-Const growth additionally rules out the device image
+   (device snapshots need B-addressable blocks) but NOT the Pallas
+   kernels, which decode postings host-side;
 3. batches of ``device_min_batch`` or more queries go to the device image:
    batched fixed-shape execution amortizes the dispatch and the gather
    touches every query's chains in one fused program;
@@ -38,7 +39,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import NamedTuple
 
-from .types import Query, TermStats
+from .types import POSITIONAL_MODES, Query, TermStats
 
 
 @dataclass(frozen=True)
@@ -86,7 +87,8 @@ class Planner:
         forced = query.backend or self.force_backend
         if forced is not None:
             unsupported = (
-                (query.mode == "phrase" and forced in ("device", "pallas")) or
+                (query.mode in POSITIONAL_MODES
+                 and forced in ("device", "pallas")) or
                 (forced == "device" and not device_capable) or
                 (forced == "pallas" and not pallas_capable) or
                 (forced == "tiered" and not tiered_capable))
@@ -95,11 +97,13 @@ class Planner:
                     f"backend {forced!r} forced, but {query.mode!r} queries "
                     "on this index layout do not support it")
             return PlanDecision(forced, "forced override")
-        if query.mode == "phrase":
+        if query.mode in POSITIONAL_MODES:
             if cfg.allow_tiered and tiered_capable and tiered_available:
                 return PlanDecision(
-                    "tiered", "phrase served from the compressed ⟨d,w⟩ tier")
-            return PlanDecision("host", "phrase requires word positions")
+                    "tiered",
+                    f"{query.mode} served from the compressed ⟨d,w⟩ tier")
+            return PlanDecision("host",
+                                f"{query.mode} requires word positions")
         if (cfg.allow_device and device_capable
                 and batch_size >= cfg.device_min_batch):
             return PlanDecision(

@@ -8,7 +8,13 @@ import numpy as np
 
 #: Query modes every backend must agree on (identical results up to float
 #: tolerance — enforced by the differential test matrix in tests/test_engine.py).
-MODES = ("conjunctive", "ranked_tfidf", "bm25", "phrase")
+MODES = ("conjunctive", "ranked_tfidf", "bm25", "phrase", "proximity",
+         "bm25_prox")
+
+#: Modes that consume word positions: they require a word-level index and
+#: run only on the backends that model positions (host / tiered) — forcing
+#: them onto the device or Pallas backends raises.
+POSITIONAL_MODES = ("phrase", "proximity", "bm25_prox")
 
 #: Backends a query may force via ``Query.backend``.
 BACKENDS = ("host", "device", "pallas", "tiered")
@@ -19,14 +25,18 @@ class Query:
     """One term-based query.
 
     ``mode`` is one of :data:`MODES`; ``k`` bounds ranked result size
-    (ignored for boolean modes); ``backend`` forces a specific backend for
-    this query, overriding the planner (raises if that backend cannot run
-    the query, rather than silently falling back).
+    (ignored for boolean modes); ``window`` is the proximity span in words
+    (required for ``mode="proximity"``, disallowed elsewhere — keeping it
+    out of non-proximity queries means equal queries stay equal, which the
+    serving layer's result-cache key relies on); ``backend`` forces a
+    specific backend for this query, overriding the planner (raises if that
+    backend cannot run the query, rather than silently falling back).
     """
 
     terms: tuple[str, ...]
     mode: str = "conjunctive"
     k: int = 10
+    window: int | None = None
     backend: str | None = None
 
     def __post_init__(self):
@@ -40,6 +50,13 @@ class Query:
             # k=0 slices diverge across backends (nz[-0:] keeps everything
             # host-side, top_k keeps nothing) — reject rather than diverge
             raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.mode == "proximity":
+            if self.window is None or self.window < 1:
+                raise ValueError("proximity queries need window >= 1, got "
+                                 f"{self.window!r}")
+        elif self.window is not None:
+            raise ValueError(
+                f"window only applies to proximity queries, not {self.mode!r}")
         object.__setattr__(self, "terms", tuple(self.terms))
 
 

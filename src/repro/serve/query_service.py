@@ -109,7 +109,12 @@ class QueryService:
         batch, self._pending = self._pending, []
         if not batch:
             return []
-        misses: list[Ticket] = []
+        # the key is computed ONCE per ticket and reused at store time: a
+        # background freeze may bump lifecycle.epoch while execute_many
+        # runs, and recomputing the key there would file the result under
+        # an engine state it was never computed against (a later query at
+        # the new epoch would then hit a stale entry)
+        misses: list[tuple[Ticket, tuple | None]] = []
         for t in batch:
             key = self._cache_key(t.query)
             hit = self._cache.get(key) if key is not None else None
@@ -119,12 +124,11 @@ class QueryService:
                 t.result = self._copy_result(hit)
             else:
                 self.cache_misses += key is not None
-                misses.append(t)
+                misses.append((t, key))
         if misses:
-            results = self.engine.execute_many([t.query for t in misses])
-            for t, r in zip(misses, results):
+            results = self.engine.execute_many([t.query for t, _ in misses])
+            for (t, key), r in zip(misses, results):
                 t.result = r
-                key = self._cache_key(t.query)
                 if key is not None:
                     self._cache[key] = self._copy_result(r)
                     while len(self._cache) > self.cache_size:
@@ -149,6 +153,16 @@ class QueryService:
         cached under the same version/epoch key as every other mode)."""
         return self.query(Query(terms=tuple(terms), mode="phrase",
                                 backend=backend))
+
+    def proximity(self, terms, window: int,
+                  backend: str | None = None) -> QueryResult:
+        """Synchronous proximity query: documents where ``terms`` co-occur
+        within ``window`` words (repeated terms bind distinct positions).
+        Served from the compressed static tier once one is published;
+        ``window`` is part of the ``Query`` value, hence of the cache key —
+        the same terms at different windows never collide."""
+        return self.query(Query(terms=tuple(terms), mode="proximity",
+                                window=window, backend=backend))
 
     # -- streams --------------------------------------------------------
 

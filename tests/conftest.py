@@ -51,3 +51,70 @@ def naive_phrase(docs, terms):
     return [i + 1 for i, d in enumerate(docs)
             if any(list(d[j:j + len(terms)]) == terms
                    for j in range(len(d) - len(terms) + 1))]
+
+
+def naive_proximity(docs, terms, window):
+    """Brute-force proximity oracle over raw token lists (1-based docids):
+    a doc matches iff some window [lo, lo+window] contains at least m_t
+    occurrences of each query term t, where m_t is t's multiplicity in the
+    query (repeated terms bind DISTINCT positions).  Enumerates every
+    occurrence position as a candidate window start — O(n^2) per doc,
+    deliberately nothing like the cursor operator's two-pointer sweep."""
+    need = {}
+    for t in terms:
+        need[t] = need.get(t, 0) + 1
+    out = []
+    for i, d in enumerate(docs):
+        pos = {t: [j for j, x in enumerate(d) if x == t] for t in need}
+        if any(len(pos[t]) < m for t, m in need.items()):
+            continue
+        starts = sorted(p for ps in pos.values() for p in ps)
+        if any(all(sum(lo <= p <= lo + window for p in pos[t]) >= m
+                   for t, m in need.items())
+               for lo in starts):
+            out.append(i + 1)
+    return out
+
+
+def naive_ranked(docs, terms, k=10, mode="tfidf", k1=0.9, b=0.4, alpha=1.0):
+    """Brute-force doc-level ranked oracle computing true f_{t,d} / f_t from
+    the raw token lists, with the same float64 operations and per-document
+    accumulation order (query-term order) as the index scorers, so scores
+    are bitwise-comparable.  Tie order: higher score, then lower docid.
+    Returns (docids, scores) — the top-k."""
+    N = len(docs)
+    doclens = np.asarray([0] + [len(d) for d in docs], dtype=np.float64)
+    avg = float(doclens[1:N + 1].mean()) if N else 0.0
+    df = {t: sum(t in d for d in docs) for t in set(terms)}
+    scores = np.zeros(N + 1, dtype=np.float64)
+    for t in terms:  # repeated query terms contribute once per slot
+        ft = df[t]
+        if ft == 0:
+            continue
+        for i, d in enumerate(docs, start=1):
+            f = d.count(t)
+            if not f:
+                continue
+            if mode == "tfidf":
+                scores[i] += np.log1p(np.float64(f)) * np.log1p(N / ft)
+            else:
+                idf = np.log(1.0 + (N - ft + 0.5) / (ft + 0.5))
+                tf = (f * (k1 + 1.0)) / (
+                    f + k1 * (1.0 - b + b * doclens[i] / max(avg, 1e-9)))
+                scores[i] += idf * tf
+    if mode == "bm25_prox":
+        for i, d in enumerate(docs, start=1):
+            if not scores[i]:
+                continue
+            pos = [[j for j, x in enumerate(d, start=1) if x == t]
+                   for t in dict.fromkeys(terms)]
+            dists = [abs(p - q) for a in range(len(pos))
+                     for bb in range(a + 1, len(pos))
+                     for p in pos[a] for q in pos[bb]]
+            delta = min(dists) if dists else None
+            scores[i] += np.log(alpha + (np.exp(-float(delta))
+                                         if delta is not None else 0.0))
+    nz = np.flatnonzero(scores)
+    order = np.lexsort((nz, -scores[nz]))[:k]
+    top = nz[order]
+    return top.astype(np.int64), scores[top]

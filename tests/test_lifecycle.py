@@ -142,6 +142,8 @@ def word_stream_docs():
 
 
 from conftest import naive_phrase as _phrase_oracle  # noqa: E402
+from conftest import naive_proximity as _prox_oracle  # noqa: E402
+from conftest import naive_ranked as _ranked_oracle  # noqa: E402
 
 
 @pytest.mark.parametrize("growth", ["const", "triangle", "expon"])
@@ -149,9 +151,12 @@ from conftest import naive_phrase as _phrase_oracle  # noqa: E402
 def test_word_level_tiered_identical_to_host_during_freeze(
         word_stream_docs, growth, codec):
     """The acceptance differential at word level: every tiered result —
-    conjunctive, ranked, AND phrase — byte-identical to the host backend
-    while ingest continues and a background freeze completes mid-stream;
-    phrase results additionally pinned to a naive scan of the raw docs."""
+    conjunctive, ranked (tfidf/bm25/bm25_prox), phrase AND proximity —
+    byte-identical to the host backend while ingest continues and a
+    background freeze completes mid-stream; phrase/proximity results
+    additionally pinned to a naive scan of the raw docs, ranked results to
+    the brute-force doc-level oracle (the ISSUE-4 w-gaps-as-frequencies bug
+    cannot regress silently)."""
     vocab, docs = word_stream_docs
     eng = Engine(B=64, growth=growth, word_level=True,
                  tier_policy=FreezePolicy(codec=codec, background=True))
@@ -164,8 +169,19 @@ def test_word_level_tiered_identical_to_host_during_freeze(
             nt = int(rng.integers(1, 4))
             terms = tuple(vocab[i] for i in
                           rng.choice(40, size=nt, replace=False))
-            for mode in ("conjunctive", "ranked_tfidf", "bm25"):
+            for mode in ("conjunctive", "ranked_tfidf", "bm25",
+                         "bm25_prox"):
                 _assert_identical(eng, terms, mode)
+            # ranked modes vs the brute-force doc-level oracle (exact)
+            for mode, oracle in (("ranked_tfidf", "tfidf"),
+                                 ("bm25", "bm25"),
+                                 ("bm25_prox", "bm25_prox")):
+                r = eng.execute(EQuery(terms=terms, mode=mode, k=10,
+                                       backend="tiered"))
+                ed, es = _ranked_oracle(docs[:ingested], list(terms), k=10,
+                                        mode=oracle)
+                assert r.docids.tolist() == ed.tolist(), (mode, terms)
+                assert np.allclose(r.scores, es, rtol=1e-12), (mode, terms)
             pt = terms[:2]
             rt = eng.execute(EQuery(terms=pt, mode="phrase",
                                     backend="tiered"))
@@ -173,6 +189,14 @@ def test_word_level_tiered_identical_to_host_during_freeze(
             exp = _phrase_oracle(docs[:ingested], pt)
             assert rt.docids.tolist() == exp, (pt,)
             assert rh.docids.tolist() == exp, (pt,)
+            w = int(rng.integers(1, 9))
+            qt = eng.execute(EQuery(terms=pt, mode="proximity", window=w,
+                                    backend="tiered"))
+            qh = eng.execute(EQuery(terms=pt, mode="proximity", window=w,
+                                    backend="host"))
+            pexp = _prox_oracle(docs[:ingested], pt, w)
+            assert qt.docids.tolist() == pexp, (pt, w)
+            assert qh.docids.tolist() == pexp, (pt, w)
 
     check()                                   # before any tier exists
     assert eng.lifecycle.freeze(blocking=False)
@@ -211,6 +235,14 @@ def test_word_level_policy_and_planner_routing(word_stream_docs):
     assert after.backend == "tiered"
     assert after.docids.tolist() == _phrase_oracle(
         docs[:130], (vocab[0], vocab[1]))
+    # proximity and bm25_prox follow the same positional routing rule
+    prox = eng.execute(EQuery(terms=(vocab[0], vocab[1]), mode="proximity",
+                              window=4))
+    assert prox.backend == "tiered"
+    assert prox.docids.tolist() == _prox_oracle(
+        docs[:130], (vocab[0], vocab[1]), 4)
+    assert eng.execute(EQuery(terms=(vocab[0], vocab[1]),
+                              mode="bm25_prox")).backend == "tiered"
     _assert_identical(eng, (vocab[1], vocab[3]), "conjunctive")
     _assert_identical(eng, (vocab[2], vocab[5]), "bm25")
 
@@ -236,6 +268,33 @@ def test_forced_phrase_on_doc_level_tiered_raises():
     with pytest.raises((ValueError, UnsupportedQueryError)):
         eng.execute(EQuery(terms=("x", "y"), mode="phrase",
                            backend="tiered"))
+    with pytest.raises((ValueError, UnsupportedQueryError)):
+        eng.execute(EQuery(terms=("x", "y"), mode="proximity", window=3,
+                           backend="tiered"))
+    with pytest.raises((ValueError, UnsupportedQueryError)):
+        eng.execute(EQuery(terms=("x", "y"), mode="bm25_prox",
+                           backend="tiered"))
+
+
+def test_forced_device_or_pallas_on_positional_modes_raises():
+    """Positional modes never run on the device/Pallas backends — a forced
+    override must raise, not silently fall back (same contract as phrase)."""
+    eng = Engine(B=64, growth="const", word_level=True)
+    eng.add_document(["x", "y", "x"])
+    for mode, kw in (("proximity", {"window": 2}), ("bm25_prox", {})):
+        for backend in ("device", "pallas"):
+            with pytest.raises((ValueError, UnsupportedQueryError)):
+                eng.execute(EQuery(terms=("x", "y"), mode=mode,
+                                   backend=backend, **kw))
+
+
+def test_query_window_validation():
+    with pytest.raises(ValueError):
+        EQuery(terms=("a", "b"), mode="proximity")            # no window
+    with pytest.raises(ValueError):
+        EQuery(terms=("a", "b"), mode="proximity", window=0)  # degenerate
+    with pytest.raises(ValueError):
+        EQuery(terms=("a",), mode="conjunctive", window=3)    # misplaced
 
 
 def test_planner_prefers_tiered_once_published(stream_docs):
@@ -337,6 +396,56 @@ def test_query_cache_disabled_and_bounded(stream_docs):
     for i in range(5):
         bounded.query(EQuery(terms=(vocab[i],), mode="conjunctive"))
     assert len(bounded._cache) <= 2
+
+
+def test_query_cache_key_covers_window(word_stream_docs):
+    """The same terms at different proximity windows are different cache
+    entries — ``window`` is part of the Query value, hence of the key."""
+    vocab, docs = word_stream_docs
+    eng = Engine(B=64, growth="const", word_level=True)
+    svc = QueryService(eng, cache_size=16)
+    for d in docs[:40]:
+        svc.ingest(d)
+    r1 = svc.proximity((vocab[0], vocab[1]), window=1)
+    r2 = svc.proximity((vocab[0], vocab[1]), window=20)
+    assert svc.cache_misses == 2 and svc.cache_hits == 0
+    assert set(r1.docids.tolist()) <= set(r2.docids.tolist())
+    assert svc.proximity((vocab[0], vocab[1]),
+                         window=1).docids.tolist() == r1.docids.tolist()
+    assert svc.cache_hits == 1
+
+
+def test_flush_cache_key_computed_once_per_ticket(stream_docs):
+    """ISSUE-4 satellite: a background freeze bumping ``lifecycle.epoch``
+    while ``execute_many`` runs must not file the result under the NEW
+    epoch (it was computed against the old tier).  The fix computes the key
+    once at lookup and reuses it at store time — so after the bump, the
+    next query at the new epoch is a miss, never a stale hit."""
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const", tier_policy=FreezePolicy())
+    svc = QueryService(eng, cache_size=16)
+    for d in docs[:60]:
+        svc.ingest(d)
+
+    real_execute_many = eng.execute_many
+
+    def racing_execute_many(queries):
+        res = real_execute_many(queries)
+        eng.lifecycle.freeze(blocking=True)   # epoch bumps mid-flush
+        return res
+
+    eng.execute_many = racing_execute_many
+    q = EQuery(terms=(vocab[0], vocab[2]), mode="conjunctive")
+    r1 = svc.query(q)                          # miss; epoch bumps during it
+    eng.execute_many = real_execute_many
+    assert svc.cache_misses == 1
+    r2 = svc.query(q)                          # new epoch -> must MISS
+    assert svc.cache_misses == 2, \
+        "result was cached under an epoch it was not computed for"
+    assert r2.docids.tolist() == r1.docids.tolist()
+    # and the old-epoch entry is simply unreachable, not wrong
+    assert svc.query(q).docids.tolist() == r1.docids.tolist()
+    assert svc.cache_hits == 1
 
 
 def test_freeze_manager_standalone(stream_docs):

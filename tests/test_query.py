@@ -41,6 +41,9 @@ def test_conjunctive_missing_term(built):
 
 @pytest.mark.parametrize("growth", ["const", "triangle"])
 def test_ranked_daat_equals_taat(built, growth):
+    """DAAT and TAAT share the canonical tie order (higher score, then
+    lower docid), so the returned DOC SETS must be identical too — not just
+    the score multisets."""
     vocab, idxs = built
     idx = idxs[growth]
     rng = np.random.default_rng(1)
@@ -49,7 +52,25 @@ def test_ranked_daat_equals_taat(built, growth):
                  rng.choice(200, size=rng.integers(1, 4), replace=False)]
         d1, s1 = Q.ranked_disjunctive(idx, terms, k=10)
         d2, s2 = Q.ranked_disjunctive_taat(idx, terms, k=10)
-        assert np.allclose(np.sort(s1), np.sort(s2), rtol=1e-9)
+        assert d1.tolist() == d2.tolist()
+        assert np.allclose(s1, s2, rtol=1e-9)
+
+
+def test_ranked_tie_breaking_at_k_boundary():
+    """Scores tying across the k boundary: both paths must keep the LOWER
+    docids (the defined tie order), never an argpartition-arbitrary set."""
+    idx = DynamicIndex(B=48)
+    for _ in range(6):
+        idx.add_document(["a", "b"])      # six identically-scored docs
+    idx.add_document(["a"])               # lower score, doc 7
+    d1, s1 = Q.ranked_disjunctive(idx, ["a", "b"], k=3)
+    d2, s2 = Q.ranked_disjunctive_taat(idx, ["a", "b"], k=3)
+    assert d1.tolist() == [1, 2, 3]
+    assert d2.tolist() == [1, 2, 3]
+    assert np.allclose(s1, s2)
+    dl = np.asarray([0] + [2] * 6 + [1], dtype=np.float64)
+    db, _ = Q.ranked_bm25(idx, ["a", "b"], dl, k=3)
+    assert db.tolist() == [1, 2, 3]
 
 
 def test_seek_geq_cursor(built):
@@ -176,3 +197,191 @@ def test_word_level_conjunctive_unique_docids(word_corpus):
         got = Q.conjunctive_query(idx, terms).tolist()
         assert got == Q.brute_conjunctive(idx, terms).tolist(), terms
         assert len(got) == len(set(got))
+
+
+# --------------------------------------------------------------------------
+# word-level ranked scoring: the ISSUE-4 bug — w-gaps were scored as term
+# frequencies and f_t inflated to occurrence counts.  Pin every ranked path
+# to the brute-force doc-level oracle over the raw documents.
+# --------------------------------------------------------------------------
+
+
+from conftest import naive_proximity as _naive_prox  # noqa: E402
+from conftest import naive_ranked as _naive_ranked  # noqa: E402
+
+
+def _doclens_of(docs):
+    return np.asarray([0] + [len(d) for d in docs], dtype=np.float64)
+
+
+def test_word_level_ranked_matches_doc_level_oracle(word_corpus):
+    """TAAT, DAAT, and BM25 over a word-level index must equal the
+    brute-force doc-level oracle exactly — docids AND scores."""
+    vocab, docs, idx = word_corpus
+    dl = _doclens_of(docs)
+    rng = np.random.default_rng(21)
+    for _ in range(40):
+        terms = [vocab[i] for i in
+                 rng.choice(25, size=rng.integers(1, 4), replace=False)]
+        exp_d, exp_s = _naive_ranked(docs, terms, k=10, mode="tfidf")
+        for got_d, got_s in (Q.ranked_disjunctive_taat(idx, terms, k=10),
+                             Q.ranked_disjunctive(idx, terms, k=10)):
+            assert got_d.tolist() == exp_d.tolist(), terms
+            assert np.allclose(got_s, exp_s, rtol=1e-12), terms
+        bd, bs = Q.ranked_bm25(idx, terms, dl, k=10)
+        ed, es = _naive_ranked(docs, terms, k=10, mode="bm25")
+        assert bd.tolist() == ed.tolist(), terms
+        assert np.allclose(bs, es, rtol=1e-12), terms
+
+
+def test_word_level_ranked_equals_doc_level_index(word_corpus):
+    """Regression: a doc-level and a word-level index over the SAME corpus
+    must produce identical ranked results (docids and scores)."""
+    vocab, docs, widx = word_corpus
+    didx = DynamicIndex(B=48)
+    for d in docs:
+        didx.add_document(d)
+    dl = _doclens_of(docs)
+    rng = np.random.default_rng(22)
+    for _ in range(30):
+        terms = [vocab[i] for i in
+                 rng.choice(25, size=rng.integers(1, 4), replace=False)]
+        for fn in (lambda ix: Q.ranked_disjunctive_taat(ix, terms, k=10),
+                   lambda ix: Q.ranked_disjunctive(ix, terms, k=10),
+                   lambda ix: Q.ranked_bm25(ix, terms, dl, k=10)):
+            wd, ws = fn(widx)
+            dd, ds = fn(didx)
+            assert wd.tolist() == dd.tolist(), terms
+            assert np.array_equal(ws, ds), terms
+
+
+def test_word_level_doc_ft_is_document_frequency(word_corpus):
+    vocab, docs, idx = word_corpus
+    for t in vocab[:10]:
+        assert Q.doc_ft(idx, t) == sum(t in d for d in docs)
+
+
+def test_bm25_prox_matches_oracle_and_prefers_near(word_corpus):
+    vocab, docs, idx = word_corpus
+    dl = _doclens_of(docs)
+    rng = np.random.default_rng(23)
+    for _ in range(25):
+        terms = [vocab[i] for i in
+                 rng.choice(25, size=rng.integers(1, 4), replace=False)]
+        gd, gs = Q.ranked_bm25_prox(idx, terms, dl, k=10)
+        ed, es = _naive_ranked(docs, terms, k=10, mode="bm25_prox")
+        assert gd.tolist() == ed.tolist(), terms
+        assert np.allclose(gs, es, rtol=1e-12), terms
+    # positions matter: adjacent terms out-rank distant ones, ceteris paribus
+    idx2 = DynamicIndex(B=48, word_level=True)
+    idx2.add_document(["p", "z", "z", "z", "z", "q"])
+    idx2.add_document(["p", "q", "z", "z", "z", "z"])
+    d, s = Q.ranked_bm25_prox(idx2, ["p", "q"],
+                              np.asarray([0, 6, 6], np.float64), k=2)
+    assert d[0] == 2 and s[0] > s[1]
+    # ...while plain BM25 ties them (identical tf/doclen)
+    db, sb = Q.ranked_bm25(idx2, ["p", "q"],
+                           np.asarray([0, 6, 6], np.float64), k=2)
+    assert db.tolist() == [1, 2] and sb[0] == sb[1]
+
+
+# --------------------------------------------------------------------------
+# proximity via the positional cursor protocol, across all cursor kinds
+# --------------------------------------------------------------------------
+
+
+def _random_prox_queries(vocab, rng, n=40):
+    out = []
+    for _ in range(n):
+        k = int(rng.integers(1, 4))
+        terms = [vocab[i] for i in rng.integers(0, len(vocab), k)]
+        out.append((terms, int(rng.integers(1, 12))))
+    # adversarial: repeated terms at tight and loose windows
+    out += [([vocab[0], vocab[0]], 1), ([vocab[0], vocab[0]], 6),
+            ([vocab[1], vocab[2], vocab[1]], 4), ([vocab[3]], 3)]
+    return out
+
+
+def test_proximity_oracle_dynamic(word_corpus):
+    vocab, docs, idx = word_corpus
+    rng = np.random.default_rng(24)
+    for terms, w in _random_prox_queries(vocab, rng):
+        got = Q.proximity_query(idx, terms, w).tolist()
+        assert got == _naive_prox(docs, terms, w), (terms, w)
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_proximity_oracle_static_cursors(word_corpus, codec):
+    from repro.core.static_index import StaticIndex
+    vocab, docs, idx = word_corpus
+    st = StaticIndex.freeze(idx, codec)
+    rng = np.random.default_rng(25)
+    for terms, w in _random_prox_queries(vocab, rng):
+        need = {}
+        for t in terms:
+            need[t] = need.get(t, 0) + 1
+        got = Q.proximity_from_cursors(
+            [st.postings_iter(t) for t in need], w,
+            list(need.values())).tolist()
+        assert got == _naive_prox(docs, terms, w), (codec, terms, w)
+
+
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_proximity_oracle_chained_tier_cursors(word_corpus, codec):
+    """Static prefix + dynamic suffix chained per unique term: proximity
+    must equal the naive scan over the WHOLE collection."""
+    from repro.core.static_index import StaticIndex
+    vocab, docs, idx0 = word_corpus
+    horizon = 70
+    idx = DynamicIndex(B=48, word_level=True)
+    for d in docs[:horizon]:
+        idx.add_document(d)
+    st = StaticIndex.freeze(idx, codec)
+    for d in docs[horizon:]:
+        idx.add_document(d)
+
+    def chained(t):
+        parts = [st.postings_iter(t)]
+        h = idx.lookup(t)
+        if h is not None:
+            c = Q.PostingsCursor(idx.store, h)
+            if c.seek_geq(horizon + 1):
+                parts.append(Q.WordPostingsCursor(c))
+        c = Q.ChainedCursor(parts)
+        return None if c.exhausted else c
+
+    rng = np.random.default_rng(26)
+    for terms, w in _random_prox_queries(vocab, rng):
+        need = {}
+        for t in terms:
+            need[t] = need.get(t, 0) + 1
+        got = Q.proximity_from_cursors(
+            [chained(t) for t in need], w, list(need.values())).tolist()
+        assert got == _naive_prox(docs, terms, w), (codec, terms, w)
+
+
+def test_proximity_duplicate_terms_bind_distinct_positions():
+    """ISSUE-4 satellite: ["a", "a"] must NOT match a doc with a single
+    occurrence of "a" (the old per-label window sweep counted the same
+    position twice)."""
+    idx = DynamicIndex(B=48, word_level=True)
+    idx.add_document(["a", "b", "c"])             # 1: one "a"
+    idx.add_document(["a", "b", "a"])             # 2: two "a", 2 apart
+    idx.add_document(["a"] + ["b"] * 8 + ["a"])   # 3: two "a", 9 apart
+    assert Q.proximity_query(idx, ["a", "a"], 5).tolist() == [2]
+    assert Q.proximity_query(idx, ["a", "a"], 9).tolist() == [2, 3]
+    # triple binding needs three distinct occurrences
+    idx.add_document(["a", "a", "a"])             # 4
+    assert Q.proximity_query(idx, ["a", "a", "a"], 9).tolist() == [4]
+    # mixed repeat: two "a" and one "b" inside one window
+    assert Q.proximity_query(idx, ["a", "b", "a"], 2).tolist() == [2]
+    assert Q.proximity_query(idx, ["a", "b", "a"], 9).tolist() == [2, 3]
+    # single-term queries: any occurrence suffices at multiplicity 1
+    assert Q.proximity_query(idx, ["a"], 1).tolist() == [1, 2, 3, 4]
+
+
+def test_proximity_requires_word_level():
+    idx = DynamicIndex(B=48)
+    idx.add_document(["a", "b"])
+    with pytest.raises(ValueError):
+        Q.proximity_query(idx, ["a", "b"], 2)
