@@ -30,7 +30,17 @@ occurrence) under both codecs, ``num_words``, and host-vs-tiered latency
 for every positional-cursor path — phrase, proximity (window=8), and the
 word-level ranked modes (``ranked_tfidf`` / ``bm25`` / ``bm25_prox``),
 which score through document-granular cursors since ISSUE 4.  Results land
-in ``BENCH_engine.json``.
+in ``BENCH_engine.json``;
+
+plus the **sharded** section (ISSUE 5): fan-out latency over a
+``ShardedEngine`` fleet at 1/2/4 shards (thread-pool fan-out, exact global
+ranked statistics) with the serial fan-out as the baseline at 4 shards, and
+a **staggered-vs-simultaneous freeze** scenario — the same aggressive
+policy run with ``max_in_flight=1`` (coordinated) and ``max_in_flight=4``
+(uncoordinated), reporting the peak number of concurrent encode threads
+observed inside ``StaticIndex.freeze`` and the availability gap (queries
+during the freeze storm that failed or disagreed with a single-engine
+oracle — must be zero).
 """
 
 from __future__ import annotations
@@ -222,6 +232,97 @@ def main() -> None:
                   f"{word_ranked_lat[mode][backend]:10.1f} us/query")
     wstats = weng.index.stats()
 
+    # ---- sharded fleet: fan-out latency + coordinated freeze scheduling ----
+    import threading
+
+    from repro.core.sharded_index import ShardedEngine
+
+    sdocs = docs[: max(300, args.docs // 2)]
+    squeries = make_batch("bm25", 3)
+    sq_host = [Query(terms=q.terms, mode=q.mode, k=q.k, backend="host")
+               for q in squeries]
+    # two workloads per fleet shape: "host" (forced numpy scoring — GIL-
+    # bound, so the pool mostly measures fan-out overhead) and "planned"
+    # (planner default: the batch routes to each shard's device image,
+    # which releases the GIL and lets the pool overlap shards)
+    fanout = []
+    for nsh, par in ((1, True), (2, True), (4, True), (4, False)):
+        fleet = ShardedEngine(num_shards=nsh, B=64, growth="const",
+                              parallel=par)
+        for d in sdocs:
+            fleet.add_document(d)
+        row = {"shards": nsh, "parallel": par}
+        for label, qs in (("host", sq_host), ("planned", squeries)):
+            secs = _timed(lambda: fleet.execute_many(qs))
+            row[f"{label}_us_per_query"] = 1e6 * secs / args.queries
+        fleet.close()
+        fanout.append(row)
+        print(f"{'sharded bm25':13s} x{nsh}{'' if par else ' serial':7s}"
+              f"{row['host_us_per_query']:10.1f} us/q host "
+              f"{row['planned_us_per_query']:10.1f} us/q planned")
+
+    def freeze_storm(max_in_flight):
+        """Ingest under an aggressive policy; measure peak concurrent
+        encodes (inside StaticIndex.freeze) and the availability gap
+        (mid-storm sharded queries vs a single-engine oracle)."""
+        lock = threading.Lock()
+        active = [0]
+        peak = [0]
+        real_freeze = StaticIndex.freeze
+
+        def counting_freeze(index, codec="bp128"):
+            with lock:
+                active[0] += 1
+                peak[0] = max(peak[0], active[0])
+            try:
+                return real_freeze(index, codec)
+            finally:
+                with lock:
+                    active[0] -= 1
+
+        StaticIndex.freeze = counting_freeze
+        try:
+            fleet = ShardedEngine(
+                num_shards=4, B=64, growth="const",
+                tier_policy=FreezePolicy(every_docs=40, background=True),
+                max_in_flight=max_in_flight)
+            oracle_eng = Engine(B=64, growth="const")
+            probe = sq_host[:4]
+            issued = answered = 0
+            for i, d in enumerate(sdocs):
+                fleet.add_document(d)
+                oracle_eng.add_document(d)
+                if i % 10 == 5:
+                    issued += len(probe)
+                    try:
+                        got = fleet.execute_many(probe)
+                    except Exception:
+                        continue
+                    exp = oracle_eng.execute_many(probe)
+                    answered += sum(
+                        g.docids.tolist() == e.docids.tolist()
+                        and np.array_equal(g.scores, e.scores)
+                        for g, e in zip(got, exp))
+            fleet.drain_freezes()
+            fleet.close()
+            return {"max_in_flight": max_in_flight,
+                    "peak_concurrent_encodes": peak[0],
+                    "freezes": int(fleet.stats().freezes),
+                    "deferrals": fleet.coordinator.deferrals,
+                    "queries_during_storm": issued,
+                    "queries_answered_exactly": answered,
+                    "availability_gap_queries": issued - answered}
+        finally:
+            StaticIndex.freeze = real_freeze
+
+    staggered = freeze_storm(1)
+    simultaneous = freeze_storm(4)
+    print(f"freeze storm: staggered peak "
+          f"{staggered['peak_concurrent_encodes']} encode(s) "
+          f"(gap {staggered['availability_gap_queries']}) vs simultaneous "
+          f"peak {simultaneous['peak_concurrent_encodes']} "
+          f"(gap {simultaneous['availability_gap_queries']})")
+
     payload = {
         "config": {"docs": eng.index.num_docs,
                    "postings": eng.index.num_postings,
@@ -263,6 +364,12 @@ def main() -> None:
             "phrase_us_per_query": phrase_lat,
             "proximity_us_per_query": prox_lat,
             "ranked_us_per_query": word_ranked_lat,
+        },
+        "sharded": {
+            "docs": len(sdocs),
+            "fanout_bm25": fanout,
+            "freeze_staggered": staggered,
+            "freeze_simultaneous": simultaneous,
         },
     }
     with open(args.out, "w") as f:

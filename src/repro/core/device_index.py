@@ -416,7 +416,8 @@ def query_step(image: DeviceIndex, qterms: jnp.ndarray, qmask: jnp.ndarray,
                k: int = 10, mode: str = "ranked",
                max_blocks: int = MAX_BLOCKS, decode_fn=None,
                doclens: jnp.ndarray | None = None,
-               n_stat: jnp.ndarray | None = None):
+               n_stat: jnp.ndarray | None = None,
+               avg_stat: jnp.ndarray | None = None):
     """Batched query execution against a device image.
 
     Args:
@@ -430,6 +431,11 @@ def query_step(image: DeviceIndex, qterms: jnp.ndarray, qmask: jnp.ndarray,
         accumulators by a fixed capacity (``image.num_docs``) but must score
         with the live N, which changes every refresh — passing it dynamically
         avoids a recompile per ingested document.
+      avg_stat: optional average document length for BM25.  Defaults to
+        ``doclens[1:].sum() / n_stat`` — correct when ``doclens`` covers
+        the whole collection, but a document-partitioned shard's local
+        doclens sum is NOT the collection's, so its fan-out layer passes
+        the fleet-wide average here.
     Returns (top docids (Q, k) i32, top scores (Q, k) f32) for ranked
     modes, or (matches (Q, N) bool, counts) for conjunctive mode.
 
@@ -504,7 +510,9 @@ def query_step(image: DeviceIndex, qterms: jnp.ndarray, qmask: jnp.ndarray,
         idf = jnp.log1p((Ns - ft + 0.5) / (ft + 0.5))
         idf = (idf * qmask.reshape(-1)).reshape(Q, T)
         dl = doclens[docid.reshape(Q, -1)]                  # (Q, P)
-        avgdl = jnp.maximum(doclens[1:].sum() / Ns, 1e-9)
+        avgdl = (jnp.maximum(doclens[1:].sum() / Ns, 1e-9)
+                 if avg_stat is None
+                 else jnp.maximum(avg_stat.astype(jnp.float32), 1e-9))
         fv = jnp.where(valid, f, 0).astype(jnp.float32).reshape(Q, -1)
         tf = (fv * (k1 + 1.0)) / (fv + k1 * (1.0 - b + b * dl / avgdl))
         w = (tf.reshape(Q, T, max_blocks, B)

@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
 
 from .static_index import StaticIndex
@@ -80,6 +81,124 @@ class StaticTier:
     epoch: int
 
 
+class FreezeCoordinator:
+    """Fleet-wide freeze scheduling: at most ``max_in_flight`` concurrent
+    static-tier encodes across every registered :class:`FreezeManager`.
+
+    A fleet of independently-freezing shards can hit its policy thresholds
+    simultaneously (round-robin ingest makes that the COMMON case — shards
+    fill in lockstep) and pay N encode threads at once: N clones resident,
+    N cores stolen from serving.  The coordinator turns that spike into a
+    stagger: a manager asks for an encode slot before starting its
+    background thread, and a refused manager queues FIFO and simply retries
+    at a later ``maybe_freeze`` — deferral, not blocking, so the writer
+    thread never stalls and the snapshot is taken when the slot is actually
+    granted (a FRESHER horizon than at queue time, which is strictly
+    better).  ``ShardedEngine`` pumps every queued manager on EVERY fleet
+    ingest (the fleet shares one writer thread), so the queue head cannot
+    wedge the FIFO by never receiving documents of its own; a fully idle
+    fleet drains deferred freezes via ``drain_freezes``.
+
+    Thread model: ``try_acquire`` runs on writer threads, ``release`` on
+    encode threads, both under one condition variable.  ``acquire`` (the
+    blocking variant, used by synchronous freezes) jumps the FIFO — it
+    holds the caller's writer thread, so making it wait for queued
+    background work could stall ingest indefinitely; the budget invariant
+    (never more than ``max_in_flight`` encodes alive) still holds.
+
+    Observability: ``in_flight`` (current), ``peak_in_flight`` (high-water
+    mark — the bench's staggered-vs-simultaneous headline), ``epoch`` (sum
+    of all managers' epochs — a composite, monotone tier-swap counter that
+    serving caches key on).
+    """
+
+    def __init__(self, max_in_flight: int = 1):
+        if max_in_flight < 1:
+            raise ValueError(f"max_in_flight must be >= 1, got "
+                             f"{max_in_flight}")
+        self.max_in_flight = max_in_flight
+        self.managers: list[FreezeManager] = []
+        self._cond = threading.Condition()
+        self._in_flight = 0
+        self._waiters: deque[FreezeManager] = deque()
+        self.peak_in_flight = 0
+        self.deferrals = 0          # refused try_acquires (queue pressure)
+
+    def register(self, manager: "FreezeManager") -> "FreezeManager":
+        """Adopt a manager: its background freezes now need an encode slot."""
+        manager.coordinator = self
+        self.managers.append(manager)
+        return manager
+
+    # -- slot accounting ---------------------------------------------------
+
+    def _grant(self) -> None:
+        self._in_flight += 1
+        self.peak_in_flight = max(self.peak_in_flight, self._in_flight)
+
+    def try_acquire(self, manager: "FreezeManager") -> bool:
+        """Non-blocking slot request (writer thread).  FIFO-fair: a refused
+        manager is queued and nobody may overtake it while slots are
+        contended."""
+        with self._cond:
+            if manager not in self._waiters:
+                self._waiters.append(manager)
+            if (self._in_flight < self.max_in_flight
+                    and self._waiters[0] is manager):
+                self._waiters.popleft()
+                self._grant()
+                return True
+            self.deferrals += 1
+            return False
+
+    def acquire(self, manager: "FreezeManager") -> None:
+        """Blocking slot request (synchronous freezes).  Jumps the FIFO —
+        see class docstring — but still counts against ``max_in_flight``."""
+        with self._cond:
+            if manager in self._waiters:
+                self._waiters.remove(manager)
+            while self._in_flight >= self.max_in_flight:
+                self._cond.wait()
+            self._grant()
+
+    def release(self, manager: "FreezeManager") -> None:
+        with self._cond:
+            self._in_flight -= 1
+            self._cond.notify_all()
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def in_flight(self) -> int:
+        with self._cond:
+            return self._in_flight
+
+    @property
+    def pending(self) -> int:
+        """Managers queued for a slot (deferred freezes)."""
+        with self._cond:
+            return len(self._waiters)
+
+    @property
+    def epoch(self) -> int:
+        """Composite tier epoch: sum of every manager's epoch.  Monotone
+        (epochs only grow), and it changes whenever ANY shard swaps its
+        tier — exactly the invalidation granularity a fleet-level
+        query-result cache needs."""
+        return sum(m.epoch for m in self.managers)
+
+    @property
+    def freezes(self) -> int:
+        return sum(m.freezes for m in self.managers)
+
+    def wait(self) -> None:
+        """Join every in-flight encode (tests / shutdown).  Queued-but-
+        deferred freezes are NOT started here — drive those through the
+        owning engines' ``maybe_freeze`` (see ``ShardedEngine.drain_freezes``)."""
+        for m in self.managers:
+            m.wait()
+
+
 class FreezeManager:
     """Owns the static tier of one engine: policy, background freeze, swap.
 
@@ -90,6 +209,11 @@ class FreezeManager:
     mid-query swap is invisible).  A freeze request while one is in flight
     is a no-op — the next ``maybe_freeze`` re-evaluates the policy against
     the new horizon.
+
+    When a :class:`FreezeCoordinator` has adopted this manager (fleet
+    serving), every encode additionally needs a slot from it: background
+    freezes defer (return False, retried at the next ``maybe_freeze``)
+    while the fleet is at its encode budget; blocking freezes wait.
     """
 
     def __init__(self, engine, policy: FreezePolicy | None = None):
@@ -100,6 +224,7 @@ class FreezeManager:
         self.freezes = 0
         self.last_freeze_s: float | None = None
         self._thread: threading.Thread | None = None
+        self.coordinator: FreezeCoordinator | None = None
 
     # -- observability ----------------------------------------------------
 
@@ -124,7 +249,9 @@ class FreezeManager:
     # -- the lifecycle -----------------------------------------------------
 
     def maybe_freeze(self) -> bool:
-        """Policy check after an ingest; starts a freeze when due."""
+        """Policy check after an ingest; starts a freeze when due (and, under
+        a coordinator, when the fleet encode budget grants a slot — a
+        refused attempt is simply retried on the next ingest)."""
         if self.in_flight:
             return False
         pol = self.policy
@@ -134,13 +261,14 @@ class FreezeManager:
                    and postings >= pol.every_postings))
         if not due or docs == 0:
             return False
-        self.freeze(blocking=not pol.background)
-        return True
+        return self.freeze(blocking=not pol.background)
 
     def freeze(self, blocking: bool = False) -> bool:
         """Snapshot now, convert (in background unless ``blocking``), swap.
 
-        Returns False if a freeze is already in flight.  The caller thread
+        Returns False if a freeze is already in flight, or if a coordinator
+        refused the encode slot (background mode only — the freeze stays
+        queued and a later ``maybe_freeze`` retries).  The caller thread
         pays for ``collate_now`` (the §5.5 copy plus, on device-capable
         layouts, the device-image snapshot it has always implied) and one
         ``clone()`` memcpy — the expensive static re-encode runs off-thread;
@@ -151,32 +279,59 @@ class FreezeManager:
             if not blocking:
                 return False
             self.wait()
+        coord = self.coordinator
+        if coord is not None:
+            # the slot covers snapshot + encode: the clone a freeze keeps
+            # resident is part of the budget the coordinator meters
+            if blocking:
+                coord.acquire(self)
+            elif not coord.try_acquire(self):
+                return False
         eng = self.engine
-        eng.collate_now()           # shared freeze point with the device tier
-        snapshot = eng.index.clone()
-        epoch = self.epoch + 1
-        t0 = time.perf_counter()
+        # from here to the handoff, the slot must not leak: if the snapshot
+        # (collate/clone) raises, work() — whose finally owns the release —
+        # never runs, and a leaked slot would wedge the whole fleet's
+        # freeze budget permanently
+        handed_off = False
+        try:
+            eng.collate_now()       # shared freeze point with the device tier
+            snapshot = eng.index.clone()
+            epoch = self.epoch + 1
+            t0 = time.perf_counter()
 
-        def work():
-            static = StaticIndex.freeze(snapshot, self.policy.codec)
-            static.epoch = epoch
-            tier = StaticTier(index=static, num_docs=snapshot.num_docs,
-                              num_postings=snapshot.num_postings,
-                              epoch=epoch)
-            # atomic publish: one reference assignment, immutable payload
-            # (Engine.stats() re-derives freezes/tier_epoch from here)
-            self.tier = tier
-            self.epoch = epoch
-            self.freezes += 1
-            self.last_freeze_s = time.perf_counter() - t0
+            def work():
+                try:
+                    static = StaticIndex.freeze(snapshot, self.policy.codec)
+                    static.epoch = epoch
+                    tier = StaticTier(index=static,
+                                      num_docs=snapshot.num_docs,
+                                      num_postings=snapshot.num_postings,
+                                      epoch=epoch)
+                    # atomic publish: one reference assignment, immutable
+                    # payload (Engine.stats() re-derives freezes/tier_epoch
+                    # from here)
+                    self.tier = tier
+                    self.epoch = epoch
+                    self.freezes += 1
+                    self.last_freeze_s = time.perf_counter() - t0
+                finally:
+                    if coord is not None:
+                        coord.release(self)
 
-        if blocking:
-            work()
-        else:
-            self._thread = threading.Thread(target=work, daemon=True,
-                                            name=f"freeze-epoch-{epoch}")
-            self._thread.start()
+            if blocking:
+                handed_off = True   # work()'s finally releases, even raising
+                work()
+            else:
+                self._thread = threading.Thread(target=work, daemon=True,
+                                                name=f"freeze-epoch-{epoch}")
+                self._thread.start()
+                handed_off = True
+        except BaseException:
+            if coord is not None and not handed_off:
+                coord.release(self)
+            raise
         return True
 
 
-__all__ = ["FreezePolicy", "StaticTier", "FreezeManager"]
+__all__ = ["FreezePolicy", "StaticTier", "FreezeManager",
+           "FreezeCoordinator"]

@@ -349,6 +349,58 @@ class TermStats(NamedTuple):
     nblocks: int = 0
 
 
+class CollectionStats(NamedTuple):
+    """Collection-wide ranking statistics for scoring a PARTITION exactly.
+
+    A document-partitioned shard sees only its own slice of the collection,
+    so its local N, f_t, and average document length are biased estimators
+    of the global ones — scoring with them breaks the byte-identical-merge
+    contract every other backend honors.  A fan-out layer (``ShardedEngine``)
+    maintains these three globally at ingest and hands them to every ranked
+    scorer, which then weights each posting with exactly the numbers a
+    single-engine oracle over the full stream would use; per-shard top-k
+    merge is then exact (same doubles, same canonical tie order).
+
+    ``ft`` maps term bytes to the global DOCUMENT frequency (never the
+    word-level occurrence count — the same doc-granularity rule as
+    :func:`doc_ft`).
+    """
+
+    num_docs: int
+    avg_doclen: float
+    ft: dict
+    fts_cache: dict | None = None   # id(vocab list) -> aligned f_t array
+
+    def doc_ft(self, term) -> int:
+        tb = term.encode() if isinstance(term, str) else term
+        return self.ft.get(tb, 0)
+
+    def fts_for(self, vocab) -> "np.ndarray":
+        """Global f_t aligned to an engine's term-id vocabulary (the array
+        shape device images rebase their metadata with).
+
+        With a ``fts_cache`` (the fleet maintains one, keyed by the
+        identity of each engine's append-only vocab list and value-updated
+        incrementally at ingest), only the suffix of terms interned since
+        the last call pays a dict lookup — a device refresh never re-walks
+        the whole vocabulary.  Callers must treat the returned array as
+        read-only (it IS the live cache entry)."""
+        if self.fts_cache is None:
+            return np.asarray([self.ft.get(tb, 0) for tb in vocab],
+                              dtype=np.int64)
+        arr = self.fts_cache.get(id(vocab))
+        V = len(vocab)
+        if arr is None:
+            arr = np.asarray([self.ft.get(tb, 0) for tb in vocab],
+                             dtype=np.int64)
+        elif len(arr) < V:
+            ext = np.asarray([self.ft.get(tb, 0) for tb in vocab[len(arr):]],
+                             dtype=np.int64)
+            arr = np.concatenate([arr, ext]) if len(arr) else ext
+        self.fts_cache[id(vocab)] = arr
+        return arr
+
+
 def term_stats(index: DynamicIndex, term) -> TermStats:
     h_ptr = index.lookup(term)
     if h_ptr is None:
@@ -464,7 +516,8 @@ def _topk_by_score(scores: np.ndarray, k: int):
     return top.astype(np.int64), scores[top]
 
 
-def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10):
+def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10,
+                       stats: CollectionStats | None = None):
     """DAAT top-k with a min-heap of "best seen so far" (paper §4.6).
 
     Runs over DOCUMENT-granular cursors (:func:`doc_cursor`), so on
@@ -474,10 +527,13 @@ def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10):
     (higher score, then lower docid): the heap compares full ``(score, -d)``
     tuples, which is exactly that order inverted.
 
+    ``stats`` (a :class:`CollectionStats`) rebases N and f_t to the full
+    collection when ``index`` is one shard of a partitioned fleet.
+
     Returns (docids, scores) sorted by descending score, docid ascending
     within ties.
     """
-    N = index.num_docs
+    N = index.num_docs if stats is None else stats.num_docs
     cursors = []
     idfs = []
     for t in terms:
@@ -485,7 +541,8 @@ def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10):
         if c is None:
             continue
         cursors.append(c)
-        idfs.append(np.log1p(N / doc_ft(index, t)))
+        ft = doc_ft(index, t) if stats is None else stats.doc_ft(t)
+        idfs.append(np.log1p(N / ft))
     if not cursors:
         return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
     heap: list[tuple[float, int]] = []  # (score, -docid) min-heap
@@ -509,7 +566,8 @@ def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10):
             np.asarray([s for s, _ in items], dtype=np.float64))
 
 
-def ranked_disjunctive_taat(index, terms, k: int = 10):
+def ranked_disjunctive_taat(index, terms, k: int = 10,
+                            stats: CollectionStats | None = None):
     """Vectorized term-at-a-time scorer (identical results, numpy-fast).
 
     The paper notes (§4.2) TAAT shares the document-sorted index requirement,
@@ -518,9 +576,12 @@ def ranked_disjunctive_taat(index, terms, k: int = 10):
     TieredView, sharded fan-outs); word-level indexes are scored through
     :func:`_doc_level_postings`, so f_{t,d}/f_t are document-level — the
     occurrence stream's repeated docids and w-gap payloads never reach the
-    accumulator.
+    accumulator.  ``stats`` rebases N and f_t to the full collection when
+    ``index`` is one shard of a partitioned fleet (the accumulator stays
+    sized by the LOCAL docid space; only the idf arithmetic goes global).
     """
     N = index.num_docs
+    Ns = N if stats is None else stats.num_docs
     scores = np.zeros(N + 1, dtype=np.float64)
     touched = False
     for t in terms:
@@ -528,7 +589,8 @@ def ranked_disjunctive_taat(index, terms, k: int = 10):
         if len(docids) == 0:
             continue
         touched = True
-        scores[docids] += tfidf_weight(fs, len(docids), N)
+        ft = len(docids) if stats is None else stats.doc_ft(t)
+        scores[docids] += tfidf_weight(fs, ft, Ns)
     if not touched:
         return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
     return _topk_by_score(scores, k)
@@ -570,23 +632,32 @@ def bm25_weight(f_td, doclen, avg_len, f_t, N, k1=0.9, b=0.4):
 
 
 def ranked_bm25(index, terms, doclens: np.ndarray,
-                k: int = 10, k1: float = 0.9, b: float = 0.4):
+                k: int = 10, k1: float = 0.9, b: float = 0.4,
+                stats: CollectionStats | None = None):
     """Top-k BM25 (TAAT; doclens is 1-indexed via position 0 padding).
 
     Like :func:`ranked_disjunctive_taat`, accepts any index-like and scores
     word-level indexes through document-granular postings, so f_{t,d} and
-    f_t are doc-level everywhere.  Returns (docids, scores) by descending
-    score, docid ascending within ties."""
+    f_t are doc-level everywhere.  ``stats`` rebases N, f_t, AND the average
+    document length to the full collection when ``index`` is one shard of a
+    partitioned fleet (``doclens`` stays the shard-local array — each doc's
+    own length is partition-invariant).  Returns (docids, scores) by
+    descending score, docid ascending within ties."""
     N = index.num_docs
-    avg = float(doclens[1:N + 1].mean()) if N else 0.0
+    if stats is None:
+        Ns = N
+        avg = float(doclens[1:N + 1].mean()) if N else 0.0
+    else:
+        Ns = stats.num_docs
+        avg = stats.avg_doclen
     scores = np.zeros(N + 1, dtype=np.float64)
     for t in terms:
         docids, fs = _doc_level_postings(index, t)
         if len(docids) == 0:
             continue
+        ft = len(docids) if stats is None else stats.doc_ft(t)
         scores[docids] += bm25_weight(
-            fs.astype(np.float64), doclens[docids], avg, len(docids), N,
-            k1, b)
+            fs.astype(np.float64), doclens[docids], avg, ft, Ns, k1, b)
     return _topk_by_score(scores, k)
 
 
@@ -782,7 +853,8 @@ def min_pair_dist(pos_lists):
 
 
 def ranked_bm25_prox(index, terms, doclens: np.ndarray, k: int = 10,
-                     k1: float = 0.9, b: float = 0.4, alpha: float = 1.0):
+                     k1: float = 0.9, b: float = 0.4, alpha: float = 1.0,
+                     stats: CollectionStats | None = None):
     """Position-aware top-k: BM25 plus the MinDist additive term —
 
         score(d) = BM25(d) + ln(alpha + exp(-delta(d)))
@@ -799,7 +871,12 @@ def ranked_bm25_prox(index, terms, doclens: np.ndarray, k: int = 10,
     if not getattr(index, "word_level", False):
         raise ValueError("ranked_bm25_prox needs a word-level index")
     N = index.num_docs
-    avg = float(doclens[1:N + 1].mean()) if N else 0.0
+    if stats is None:
+        Ns = N
+        avg = float(doclens[1:N + 1].mean()) if N else 0.0
+    else:
+        Ns = stats.num_docs
+        avg = stats.avg_doclen
     # pass 1 — the plain BM25 TAAT accumulation over doc-level postings
     # (the tiered view's doc_postings never touches the w-gap stream)
     uniq = list(dict.fromkeys(terms))
@@ -809,8 +886,9 @@ def ranked_bm25_prox(index, terms, doclens: np.ndarray, k: int = 10,
         ds, fs = gathered[t]
         if len(ds) == 0:
             continue
+        ft = len(ds) if stats is None else stats.doc_ft(t)
         scores[ds] += bm25_weight(fs.astype(np.float64), doclens[ds], avg,
-                                  len(ds), N, k1, b)
+                                  ft, Ns, k1, b)
     # pass 2 — positions only where the bonus can be nonzero: docs holding
     # >= 2 distinct query terms, visited by a fresh seek_geq-skipping
     # positional cursor (lazy ⟨d,w⟩ block decode on the static tier)

@@ -18,8 +18,10 @@ out to every shard and the per-shard top-k results are fused:
 Conjunctive queries need no merge at all (docid spaces are disjoint): the
 local hit bitmaps concatenate, so the collective is a pure reshard.
 
-Local docids are 1..N_shard; global ids are formed as
-``shard_rank * N_shard + local`` inside the mapped function.
+Local docids are 1..N_shard; global ids are formed inside the mapped
+function as ``doc_offset[shard] + local``, where the offsets are the
+exclusive prefix sum of the shards' own document counts
+(:func:`shard_doc_offsets`) — exact even when shard sizes diverge.
 
 Two layers live here:
 
@@ -56,6 +58,12 @@ def stack_images(images: list[DeviceIndex]) -> DeviceIndex:
     """Concatenate per-shard images along a leading shard axis.
 
     All shards must share (V, B) and are padded to the max block count.
+    ``num_docs`` of the stacked image is the TOTAL collection size (the sum
+    over shards — it is a collection statistic, not a per-shard capacity;
+    the per-shard docid capacity is the ``num_docs`` argument of
+    :func:`make_sharded_query_step`, and per-shard rank offsets come from
+    :func:`shard_doc_offsets`, so shards of unequal size globalize
+    correctly).
     """
     nb = max(int(im.blocks.shape[0]) for im in images)
     B = images[0].blocks.shape[1]
@@ -70,8 +78,22 @@ def stack_images(images: list[DeviceIndex]) -> DeviceIndex:
         term_skip=jnp.concatenate([im.term_skip for im in images]),
         term_nx=jnp.concatenate([im.term_nx for im in images]),
         term_ft=jnp.concatenate([im.term_ft for im in images]),
-        num_docs=max(im.num_docs for im in images),
+        num_docs=sum(im.num_docs for im in images),
         F=images[0].F)
+
+
+def shard_doc_offsets(images: list[DeviceIndex]) -> "jnp.ndarray":
+    """Per-shard global-docid offsets: shard i's local docid d maps to
+    ``offsets[i] + d``.  Built from each shard's OWN ``num_docs`` (an
+    exclusive prefix sum), so shards of different sizes pack the global
+    docid space contiguously — a uniform ``rank * max(num_docs)`` stride
+    would leave holes and, worse, disagree with any host-side mapping that
+    concatenates the shard collections."""
+    sizes = [int(im.num_docs) for im in images]
+    off = [0]
+    for s in sizes[:-1]:
+        off.append(off[-1] + s)
+    return jnp.asarray(off, dtype=jnp.int32)
 
 
 def make_sharded_query_step(mesh, *, k: int = 10, max_blocks: int = 64,
@@ -83,11 +105,28 @@ def make_sharded_query_step(mesh, *, k: int = 10, max_blocks: int = 64,
     batch over "model".  Returns (fn, in_shardings, out_shardings) ready for
     ``jax.jit(...).lower()`` — launch/dryrun.py lowers exactly this.  The
     mapped function takes the six image arrays explicitly (pytree aux fields
-    cannot carry shardings): fn(blocks, slot, nblk, skip, nx, ft, qt, qm).
+    cannot carry shardings) plus the per-shard global-docid offsets
+    (:func:`shard_doc_offsets` — each shard reads its OWN offset, so shards
+    of unequal document count globalize exactly):
+    fn(blocks, slot, nblk, skip, nx, ft, doc_offsets, qt, qm).
+
+    ``num_docs`` is both the per-shard docid CAPACITY (accumulators are
+    sized by it; every shard's local docids must fit) and the N the mapped
+    scorer weights idf with.  For exact global ranked statistics, rebase
+    each shard's ``term_ft`` to the collection-wide document frequencies
+    via :func:`~repro.core.device_index.with_global_stats` — KEEPING each
+    image's shard-local ``num_docs`` (``shard_doc_offsets`` prefix-sums it,
+    so overwriting it with the global N corrupts every offset) — and pass
+    the collection total as THIS function's ``num_docs``
+    (tests/test_sharded_index.py's unequal-shard test is the reference
+    recipe).  Shard-local ``term_ft`` gives the standard
+    document-partitioned idf approximation instead, not a merge-exact
+    score.
     """
     doc_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     img_specs = (P(doc_axes, None), P(doc_axes), P(doc_axes), P(doc_axes),
                  P(doc_axes), P(doc_axes))
+    off_spec = P(doc_axes)
     q_spec = P("model", None)
 
     if mode == "conjunctive":
@@ -95,7 +134,7 @@ def make_sharded_query_step(mesh, *, k: int = 10, max_blocks: int = 64,
         # disjoint, so the per-shard hit bitmaps simply tile the global
         # docid axis — output stays sharded (model x doc-axes), zero
         # cross-shard traffic beyond the replicated query broadcast.
-        def fn_conj(blocks, slot, nblk, skip, nx, ft, qterms, qmask):
+        def fn_conj(blocks, slot, nblk, skip, nx, ft, offs, qterms, qmask):
             image = DeviceIndex(blocks, slot, nblk, skip, nx, ft,
                                 num_docs=num_docs, F=F)
             matches, counts = query_step(
@@ -106,7 +145,7 @@ def make_sharded_query_step(mesh, *, k: int = 10, max_blocks: int = 64,
                 total = jax.lax.psum(total, ax)
             return matches, total
 
-        in_specs = img_specs + (q_spec, q_spec)
+        in_specs = img_specs + (off_spec, q_spec, q_spec)
         out_specs = (P("model", doc_axes), P("model"))
         mapped = shard_map(fn_conj, mesh=mesh, in_specs=in_specs,
                            out_specs=out_specs, check_vma=False)
@@ -114,22 +153,16 @@ def make_sharded_query_step(mesh, *, k: int = 10, max_blocks: int = 64,
         out_sharding = tuple(jax.NamedSharding(mesh, s) for s in out_specs)
         return mapped, in_sharding, out_sharding
 
-    def fn(blocks, slot, nblk, skip, nx, ft, qterms, qmask):
+    def fn(blocks, slot, nblk, skip, nx, ft, offs, qterms, qmask):
         image = DeviceIndex(blocks, slot, nblk, skip, nx, ft,
                             num_docs=num_docs, F=F)
         local_d, local_s = query_step(
             image, qterms, qmask, k=k, mode=mode,
             max_blocks=max_blocks, decode_fn=decode_fn)
-        # globalize docids by shard rank over the document axes
-        rank = jnp.int32(0)
-        nshards = 1
-        for ax in doc_axes:
-            # mesh axis sizes are static; jax.lax.axis_size only exists on
-            # newer jax, so read them from the mesh closure instead
-            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
-            nshards *= mesh.shape[ax]
-        global_d = jnp.where(local_d > 0,
-                             local_d + rank * jnp.int32(image.num_docs), 0)
+        # globalize docids by this shard's own offset (exclusive prefix sum
+        # of the preceding shards' num_docs — NOT a uniform rank stride,
+        # which would misplace docids the moment shard sizes diverge)
+        global_d = jnp.where(local_d > 0, local_d + offs[0], 0)
         # fuse: all-gather the per-shard top-k and re-select
         gs = local_s
         gd = global_d
@@ -145,7 +178,7 @@ def make_sharded_query_step(mesh, *, k: int = 10, max_blocks: int = 64,
         return top_d, top_s
 
     # NB: shard_map requires explicit specs for every input leaf
-    in_specs = img_specs + (q_spec, q_spec)
+    in_specs = img_specs + (off_spec, q_spec, q_spec)
     out_specs = (P("model", None), P("model", None))
     mapped = shard_map(fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
@@ -163,10 +196,11 @@ def sharded_input_specs(mesh, *, shard_blocks: int, B: int = 64,
         if ax in mesh.axis_names:
             nshards *= mesh.shape[ax]
     meta = jax.ShapeDtypeStruct((nshards * vocab,), jnp.int32)
+    offs = jax.ShapeDtypeStruct((nshards,), jnp.int32)
     q = jax.ShapeDtypeStruct((qbatch, qterms), jnp.int32)
     m = jax.ShapeDtypeStruct((qbatch, qterms), jnp.bool_)
     return (jax.ShapeDtypeStruct((nshards * shard_blocks, B), jnp.uint8),
-            meta, meta, meta, meta, meta, q, m)
+            meta, meta, meta, meta, meta, offs, q, m)
 
 
 # --------------------------------------------------------------------------
@@ -175,83 +209,280 @@ def sharded_input_specs(mesh, *, shard_blocks: int, B: int = 64,
 
 
 class ShardedEngine:
-    """Document-partitioned fan-out of per-shard query engines.
+    """Document-partitioned fan-out of per-shard query engines — a
+    first-class Engine: exact, parallel, and freeze-coordinated.
 
     Documents are assigned round-robin; each shard runs a full
     ``repro.engine.Engine`` (its planner may independently pick host,
-    device, or Pallas execution, and its device image refreshes
-    incrementally).  Queries fan out to every shard and results fuse:
+    device, Pallas, or tiered execution, and its device image refreshes
+    incrementally).  Queries fan out to every shard — on a thread pool, so
+    fan-out wall-clock is the max over shards, not the sum — and results
+    fuse:
 
-      * boolean modes — per-shard docid lists are globalized and
-        concatenated (docid spaces are disjoint, no dedup needed);
-      * ranked modes — per-shard top-k lists merge by score.
+      * boolean modes (conjunctive / phrase / proximity) — per-shard docid
+        lists are globalized and concatenated (docid spaces are disjoint,
+        no dedup needed);
+      * ranked modes — per-shard top-k lists merge under the canonical tie
+        order (higher score, then lower global docid).
 
-    Ranked scores use shard-local (N, f_t) statistics, the standard
-    document-partitioned IDF approximation; with round-robin assignment the
-    shard statistics are unbiased estimators of the global ones.  Boolean
-    results are exact.
+    **Docid arithmetic** — round-robin assignment is pure arithmetic, no
+    per-document maps: global docid ``g`` lives on shard ``(g-1) % S`` as
+    local docid ``(g-1) // S + 1``; local ``l`` on shard ``s`` globalizes
+    to ``(l-1)*S + s + 1``.  Globalization is one vectorized affine map and
+    the engine carries O(1) routing state regardless of collection size.
+    The map is strictly monotone per shard, so per-shard canonical tie
+    order IS global canonical tie order — which is what makes the top-k
+    merge exact at tied boundaries.
+
+    **Exact global ranked statistics** — the fan-out maintains the
+    collection-wide document frequencies, N, and total token count at
+    ingest and hands every shard a :class:`~repro.core.query.
+    CollectionStats` provider (the same rebasing seam the device
+    frozen+delta path uses).  Shards therefore weight postings with exactly
+    the numbers a single-engine oracle over the full stream would use, and
+    the merged top-k is byte-identical to that oracle (same doubles, same
+    canonical tie order) — no shard-local IDF approximation remains.
+
+    **Coordinated freezes** — per-shard static-tier lifecycles register
+    with one :class:`~repro.core.lifecycle.FreezeCoordinator`; at most
+    ``max_in_flight`` background encodes run fleet-wide, and refused
+    shards retry on any later fleet ingest (every queued shard is pumped
+    per ingest — see the coordinator docstring) or via
+    :meth:`drain_freezes`.
+
+    **Serving integration** — ``version`` (bumps per ingested document) and
+    ``lifecycle.epoch`` (composite tier epoch, bumps on any shard's swap)
+    give ``serve.QueryService`` the same cache-key components a single
+    engine exposes, so result caching and invalidation work unchanged.
     """
 
     def __init__(self, num_shards: int = 2, engine_factory=None,
+                 max_in_flight: int = 1, parallel: bool = True,
                  **engine_kwargs):
         from ..engine import Engine
+        from .lifecycle import FreezeCoordinator
         if engine_factory is None:
             def engine_factory():
                 return Engine(**engine_kwargs)
         self.engines = [engine_factory() for _ in range(num_shards)]
-        # global docid 0 is the usual 1-based padding slot
-        self._owner: list[tuple[int, int]] = [(0, 0)]  # g -> (shard, local)
-        self._to_global: list[list[int]] = [[0] for _ in self.engines]
-        self._next_shard = 0
+        self.num_shards = len(self.engines)
+        self.version = 0              # bumps per ingested document
+        self._num_docs = 0
+        self._total_tokens = 0
+        self._ft: dict[bytes, int] = {}   # term -> global DOCUMENT frequency
+        # per-shard global-f_t arrays aligned to each shard's term ids
+        # (keyed by the identity of the engine's append-only vocab list),
+        # value-updated incrementally at ingest and suffix-extended at read
+        # time — a device-image refresh never re-walks the vocabulary
+        self._gft_cache: dict[int, "np.ndarray"] = {}
+        # every shard scores with the fleet's collection-wide statistics
+        for e in self.engines:
+            e.stats_provider = self.collection_stats
+        # fleet freeze scheduling: one coordinator owns every shard lifecycle
+        self.coordinator = FreezeCoordinator(max_in_flight=max_in_flight)
+        for e in self.engines:
+            if getattr(e, "lifecycle", None) is not None:
+                self.coordinator.register(e.lifecycle)
+        self._pool = None
+        if parallel and self.num_shards > 1:
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.num_shards,
+                thread_name_prefix="shard-fanout")
+
+    def close(self) -> None:
+        """Release the fan-out thread pool and join in-flight freezes.
+        Idempotent; the engine degrades to serial fan-out afterwards —
+        transient fleets (benchmarks, resize/rebuild cycles) should close
+        rather than leak ``num_shards`` worker threads until exit."""
+        for e in self.engines:
+            if getattr(e, "lifecycle", None) is not None:
+                e.lifecycle.wait()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self) -> "ShardedEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # collection statistics (the exactness seam)
+    # ------------------------------------------------------------------
+
+    def collection_stats(self):
+        """Fleet-wide (N, avg doclen, f_t) — what every ranked scorer and
+        device-image refresh rebases with.  ``avg`` is total tokens over N,
+        which equals the oracle's ``doclens[1:N+1].mean()`` bit-for-bit
+        (integer sums below 2**53 are exact in float64)."""
+        from .query import CollectionStats
+        n = self._num_docs
+        return CollectionStats(
+            num_docs=n,
+            avg_doclen=self._total_tokens / n if n else 0.0,
+            ft=self._ft,
+            fts_cache=self._gft_cache)
 
     @property
     def num_docs(self) -> int:
-        return len(self._owner) - 1
+        return self._num_docs
+
+    @property
+    def num_postings(self) -> int:
+        return sum(e.index.num_postings for e in self.engines)
+
+    @property
+    def lifecycle(self):
+        """The fleet coordinator: exposes the composite ``epoch`` the
+        serving cache keys on (duck-compatible with a single engine's
+        ``FreezeManager`` for that purpose)."""
+        return self.coordinator
+
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
 
     def add_document(self, terms) -> int:
-        shard = self._next_shard
-        self._next_shard = (self._next_shard + 1) % len(self.engines)
+        """Ingest one document (single front-door thread — queries and
+        ingest are serialized by the caller, the same one-writer model as
+        ``Engine``/``QueryService``; the fan-out pool is only ever busy
+        INSIDE ``execute_many``, never concurrently with an ingest)."""
+        g = self._num_docs + 1
+        shard = (g - 1) % self.num_shards
+        # global stats BEFORE the shard ingest, so the maybe_freeze hooks
+        # that fire inside it already see statistics covering this doc
+        tbs = [t.encode() if isinstance(t, str) else t for t in terms]
+        # resolve each shard's materialized aligned-f_t array once per doc
+        # (most fleets have none until a device query materializes them)
+        live = [(e._tid, arr) for e in self.engines
+                if (arr := self._gft_cache.get(id(e.vocab))) is not None]
+        for tb in dict.fromkeys(tbs):
+            df = self._ft.get(tb, 0) + 1
+            self._ft[tb] = df
+            # keep the materialized per-shard aligned f_t arrays current
+            # (terms a shard interns later are picked up by the suffix
+            # extension in CollectionStats.fts_for)
+            for tid_map, arr in live:
+                tid = tid_map.get(tb)
+                if tid is not None and tid < len(arr):
+                    arr[tid] = df
+        self._total_tokens += len(terms)
+        self._num_docs = g
         local = self.engines[shard].add_document(terms)
-        g = len(self._owner)
-        self._owner.append((shard, local))
-        assert len(self._to_global[shard]) == local
-        self._to_global[shard].append(g)
+        assert local == (g - 1) // self.num_shards + 1
+        # a global ingest changes every shard's scoring state (N, f_t, avg
+        # all moved): bump the non-owner versions too so their device
+        # images re-rebase statistics on the next refresh
+        for s, e in enumerate(self.engines):
+            if s != shard:
+                e.version += 1
+        self.version += 1
+        # pump deferred freezes fleet-wide: the fleet shares ONE writer
+        # thread (this method), so a shard whose encode-slot request was
+        # refused may retry on ANY ingest — not only its own — which keeps
+        # the coordinator's FIFO live even if routing ever skews away from
+        # the queue head
+        if self.coordinator.pending:
+            for s, e in enumerate(self.engines):
+                if s != shard and getattr(e, "lifecycle", None) is not None:
+                    e.lifecycle.maybe_freeze()
         return g
 
     def collate_now(self) -> None:
         for e in self.engines:
             e.collate_now()
 
+    def drain_freezes(self) -> None:
+        """Run every due-or-deferred freeze to completion (tests, shutdown,
+        bulk-load tails).  No ingest may run concurrently — this pumps the
+        writer-thread side of deferred freezes that would otherwise wait
+        for the next document.  Bails out (rather than spinning) if an
+        epoch fails to advance — a crashed encode thread must not wedge
+        shutdown."""
+        mgrs = [e.lifecycle for e in self.engines
+                if getattr(e, "lifecycle", None) is not None]
+        while True:
+            for m in mgrs:
+                m.wait()
+            before = [m.epoch for m in mgrs]
+            if not any([m.maybe_freeze() for m in mgrs]):
+                break
+            for m in mgrs:
+                m.wait()
+            if [m.epoch for m in mgrs] == before:
+                break
+        for m in mgrs:
+            m.wait()
+
+    # ------------------------------------------------------------------
+    # query fan-out
+    # ------------------------------------------------------------------
+
     def execute(self, query):
         return self.execute_many([query])[0]
 
     def _globalize(self, shard: int, docids) -> "np.ndarray":
+        """Vectorized round-robin globalization: (l-1)*S + shard + 1."""
         import numpy as np
-        lut = np.asarray(self._to_global[shard], dtype=np.int64)
-        return lut[np.asarray(docids, dtype=np.int64)]
+        local = np.asarray(docids, dtype=np.int64)
+        return (local - 1) * self.num_shards + shard + 1
 
     def execute_many(self, queries):
-        """Fan a batch out to every shard engine and fuse per query."""
+        """Fan a batch out to every shard engine (in parallel) and fuse per
+        query.  Each shard result's docids are globalized arithmetically;
+        the fused ``backend`` reports the SET of backends that actually
+        served the shards (e.g. ``"host+tiered"``)."""
         import numpy as np
 
         from ..engine.types import QueryResult
-        per_shard = [e.execute_many(queries) for e in self.engines]
+        if self._pool is not None:
+            per_shard = list(self._pool.map(
+                lambda e: e.execute_many(queries), self.engines))
+        else:
+            per_shard = [e.execute_many(queries) for e in self.engines]
         out = []
         for qi, q in enumerate(queries):
-            shard_res = [per_shard[s][qi] for s in range(len(self.engines))]
+            shard_res = [per_shard[s][qi] for s in range(self.num_shards)]
+            backend = "+".join(sorted({r.backend for r in shard_res}))
+            reason = f"sharded fan-out x{self.num_shards}"
             gids = np.concatenate([self._globalize(s, r.docids)
                                    for s, r in enumerate(shard_res)])
             if q.mode in ("conjunctive", "phrase", "proximity"):
-                out.append(QueryResult(np.sort(gids), None,
-                                       shard_res[0].backend, "sharded"))
+                out.append(QueryResult(np.sort(gids), None, backend, reason))
             else:
                 scores = np.concatenate([r.scores for r in shard_res])
                 # canonical ranked tie order across shards: higher score
                 # first, then lower GLOBAL docid (not shard arrival order)
                 order = np.lexsort((gids, -scores))[:q.k]
                 out.append(QueryResult(gids[order], scores[order],
-                                       shard_res[0].backend, "sharded"))
+                                       backend, reason))
         return out
 
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
     def stats(self):
-        return [e.stats() for e in self.engines]
+        """One composite :class:`~repro.engine.types.EngineStats` for the
+        fleet (summed counters, merged backend histogram, composite tier
+        epoch).  Per-shard detail remains available as
+        ``[e.stats() for e in engine.engines]``."""
+        from ..engine.types import EngineStats
+        agg = EngineStats()
+        for e in self.engines:
+            s = e.stats()
+            agg.num_postings += s.num_postings
+            agg.num_words += s.num_words
+            agg.queries += s.queries
+            agg.collations += s.collations
+            agg.delta_refreshes += s.delta_refreshes
+            agg.freezes += s.freezes
+            for k, v in s.by_backend.items():
+                agg.by_backend[k] = agg.by_backend.get(k, 0) + v
+        agg.num_docs = self._num_docs
+        agg.vocab_size = len(self._ft)
+        agg.tier_epoch = self.coordinator.epoch
+        agg.num_shards = self.num_shards
+        return agg

@@ -32,7 +32,12 @@ term statistics (f_t, chain lengths, batch size), with a forced-override
 knob (``Engine(force_backend=...)`` or ``Query(backend=...)``).
 """
 
-from ..core.lifecycle import FreezeManager, FreezePolicy, StaticTier
+from ..core.lifecycle import (
+    FreezeCoordinator,
+    FreezeManager,
+    FreezePolicy,
+    StaticTier,
+)
 from .backends import (
     HostBackend,
     PallasBackend,
@@ -42,12 +47,18 @@ from .backends import (
 from .device_backend import DeviceBackend
 from .engine import Engine
 from .planner import PlanDecision, Planner, PlannerConfig
-from .types import MODES, POSITIONAL_MODES, Query, QueryResult
+from .types import (
+    MODES,
+    POSITIONAL_MODES,
+    CollectionStats,
+    Query,
+    QueryResult,
+)
 
 __all__ = [
     "Engine", "Query", "QueryResult", "Planner", "PlannerConfig",
     "PlanDecision", "HostBackend", "DeviceBackend", "PallasBackend",
     "TieredBackend", "UnsupportedQueryError",
-    "FreezeManager", "FreezePolicy", "StaticTier",
-    "MODES", "POSITIONAL_MODES",
+    "FreezeManager", "FreezePolicy", "StaticTier", "FreezeCoordinator",
+    "CollectionStats", "MODES", "POSITIONAL_MODES",
 ]

@@ -47,15 +47,17 @@ class HostBackend(Backend):
     def execute(self, query: Query) -> QueryResult:
         eng = self.engine
         idx = eng.index
+        stats = eng.ranking_stats()   # fleet-wide (N, f_t, avgdl) or None
         if query.mode == "conjunctive":
             d = hostq.conjunctive_query(idx, query.terms)
             return QueryResult(d, None, self.name)
         if query.mode == "ranked_tfidf":
-            d, s = hostq.ranked_disjunctive_taat(idx, query.terms, k=query.k)
+            d, s = hostq.ranked_disjunctive_taat(idx, query.terms, k=query.k,
+                                                 stats=stats)
             return QueryResult(d, s, self.name)
         if query.mode == "bm25":
             d, s = hostq.ranked_bm25(idx, query.terms, eng.doclens_array(),
-                                     k=query.k)
+                                     k=query.k, stats=stats)
             return QueryResult(d, s, self.name)
         if query.mode == "phrase":
             if not idx.word_level:
@@ -74,7 +76,8 @@ class HostBackend(Backend):
                 raise UnsupportedQueryError(
                     "bm25_prox queries need a word-level index (§5.1)")
             d, s = hostq.ranked_bm25_prox(idx, query.terms,
-                                          eng.doclens_array(), k=query.k)
+                                          eng.doclens_array(), k=query.k,
+                                          stats=stats)
             return QueryResult(d, s, self.name)
         raise UnsupportedQueryError(f"unknown mode {query.mode!r}")
 
@@ -215,6 +218,7 @@ class TieredBackend(Backend):
     def execute(self, query: Query) -> QueryResult:
         eng = self.engine
         view = self.view()
+        stats = eng.ranking_stats()   # fleet-wide (N, f_t, avgdl) or None
         if query.mode in ("phrase", "proximity", "bm25_prox") \
                 and not eng.index.word_level:
             raise UnsupportedQueryError(
@@ -231,7 +235,8 @@ class TieredBackend(Backend):
             return QueryResult(d, None, self.name)
         if query.mode == "bm25_prox":
             d, s = hostq.ranked_bm25_prox(view, query.terms,
-                                          eng.doclens_array(), k=query.k)
+                                          eng.doclens_array(), k=query.k,
+                                          stats=stats)
             return QueryResult(d, s, self.name)
         if query.mode == "conjunctive":
             cursors = []
@@ -248,11 +253,12 @@ class TieredBackend(Backend):
             d = hostq.conjunctive_from_cursors([c for _, c in cursors])
             return QueryResult(d, None, self.name)
         if query.mode == "ranked_tfidf":
-            d, s = hostq.ranked_disjunctive_taat(view, query.terms, k=query.k)
+            d, s = hostq.ranked_disjunctive_taat(view, query.terms,
+                                                 k=query.k, stats=stats)
             return QueryResult(d, s, self.name)
         if query.mode == "bm25":
             d, s = hostq.ranked_bm25(view, query.terms, eng.doclens_array(),
-                                     k=query.k)
+                                     k=query.k, stats=stats)
             return QueryResult(d, s, self.name)
         raise UnsupportedQueryError(f"unknown mode {query.mode!r}")
 
@@ -301,20 +307,26 @@ class PallasBackend(Backend):
         eng = self.engine
         idx = eng.index
         N = idx.num_docs
+        stats = eng.ranking_stats()   # fleet-wide (N, f_t, avgdl) or None
+        Ns = N if stats is None else stats.num_docs
         all_d, all_w = [], []
         doclens = eng.doclens_array() if query.mode == "bm25" else None
-        avg = (float(doclens[1:N + 1].mean()) if query.mode == "bm25" and N
-               else 0.0)
+        if query.mode != "bm25":
+            avg = 0.0
+        elif stats is not None:
+            avg = stats.avg_doclen
+        else:
+            avg = float(doclens[1:N + 1].mean()) if N else 0.0
         for t in query.terms:
             docids, fs = idx.postings(t)
             if len(docids) == 0:
                 continue
-            ft = len(docids)
+            ft = len(docids) if stats is None else stats.doc_ft(t)
             if query.mode == "bm25":
                 w = hostq.bm25_weight(fs.astype(np.float64),
-                                      doclens[docids], avg, ft, N)
+                                      doclens[docids], avg, ft, Ns)
             else:
-                w = hostq.tfidf_weight(fs, ft, N)
+                w = hostq.tfidf_weight(fs, ft, Ns)
             all_d.append(docids.astype(np.int32))
             all_w.append(w.astype(np.float32))
         if not all_d:

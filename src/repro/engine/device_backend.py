@@ -55,6 +55,7 @@ class DeviceBackend(Backend):
         self._delta = None                             # DeltaIndex
         self._doclens = None                           # (cap+1,) f32 device
         self._n_stat = None
+        self._avg_stat = None                          # fleet avgdl (sharded)
         self._synced_version = -1
         self._frozen_mb = 1                            # max_blocks, frozen
         self._delta_mb = 1                             # max_blocks, delta
@@ -97,7 +98,13 @@ class DeviceBackend(Backend):
         N = eng.index.num_docs
         doc_cap = max(self._doc_cap, _pow2(N + 1))
         vocab_cap = max(self._vocab_cap, _pow2(len(eng.vocab)))
+        # scoring f_t (collection-wide under a fleet stats provider) vs the
+        # engine's LOCAL counters: change detection in build_delta_image
+        # compares against the freeze baseline's store-level f_t, so it must
+        # see the local numbers — the global ones would flag every term of
+        # a sharded engine as changed and blow the delta up to O(V)
         fts = eng.global_fts()
+        local_fts = np.asarray(eng._fts, dtype=np.int64)
         # the frozen image's chain metadata only changes when a bucket grows
         # or after a freeze; per-refresh work is just the f_t swap + delta
         if (self._frozen is None or doc_cap != self._doc_cap
@@ -110,7 +117,14 @@ class DeviceBackend(Backend):
         self._doc_cap, self._vocab_cap = doc_cap, vocab_cap
         delta = build_delta_image(eng.index, eng.vocab, self._baseline,
                                   num_docs=self._doc_cap,
-                                  pad_vocab=self._vocab_cap, global_ft=fts)
+                                  pad_vocab=self._vocab_cap,
+                                  global_ft=local_fts)
+        if eng.stats_provider is not None:
+            # fleet mode: the delta weights its postings with the same
+            # collection-wide f_t as the frozen image (same idf, exact merge)
+            ftp = np.zeros(int(delta.term_ft.shape[0]), np.int32)
+            ftp[:min(len(fts), len(ftp))] = fts[:len(ftp)]
+            delta.term_ft = jnp.asarray(ftp)
         nd = _pow2(int(delta.blocks.shape[0]))
         if nd > delta.blocks.shape[0]:
             delta.blocks = jnp.pad(
@@ -121,7 +135,16 @@ class DeviceBackend(Backend):
         dl = np.zeros(self._doc_cap + 1, np.float32)
         dl[1:N + 1] = eng.doclens_array()[1:N + 1]
         self._doclens = jnp.asarray(dl)
-        self._n_stat = jnp.int32(N)
+        # scoring statistics: in a fleet, idf-N and avgdl are the
+        # COLLECTION's (the fts above already came global via global_fts);
+        # doclens stays local — each doc's own length is partition-invariant
+        stats = eng.ranking_stats()
+        if stats is None:
+            self._n_stat = jnp.int32(N)
+            self._avg_stat = None
+        else:
+            self._n_stat = jnp.int32(stats.num_docs)
+            self._avg_stat = jnp.float32(stats.avg_doclen)
         self._synced_version = eng.version
         eng.stats_counters.delta_refreshes += 1
         return True
@@ -186,7 +209,7 @@ class DeviceBackend(Backend):
             qm[row, :len(ids)] = True
         qt, qm = jnp.asarray(qt), jnp.asarray(qm)
         kw = dict(max_blocks=self._frozen_mb, decode_fn=self.decode_fn,
-                  n_stat=self._n_stat)
+                  n_stat=self._n_stat, avg_stat=self._avg_stat)
         kwd = dict(kw, max_blocks=self._delta_mb)
         if mode == "conjunctive":
             mf, _ = query_step(self._frozen, qt, qm, k=1,

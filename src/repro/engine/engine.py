@@ -68,6 +68,12 @@ class Engine:
         self.planner = Planner(planner, force_backend)
         self.auto_collate_delta_frac = auto_collate_delta_frac
         self.version = 0                  # bumps per ingested document
+        # when this engine is one shard of a document-partitioned fleet,
+        # the fan-out layer installs a callable returning the fleet-wide
+        # CollectionStats — every ranked scorer and device-image refresh
+        # then rebases (N, f_t, avgdl) to the full collection, making
+        # shard results merge-exact.  None = this engine IS the collection.
+        self.stats_provider = None
         self.vocab: list[bytes] = []      # tid -> term bytes
         self._tid: dict[bytes, int] = {}
         self._fts: list[int] = []         # tid -> f_t, maintained at ingest
@@ -127,11 +133,25 @@ class Engine:
         tb = term.encode() if isinstance(term, str) else term
         return self._tid.get(tb)
 
+    def ranking_stats(self):
+        """The :class:`~repro.core.query.CollectionStats` to score with, or
+        None when this engine's own statistics ARE the collection's (the
+        single-engine case).  Backends pass this straight into the ranked
+        scorers."""
+        return self.stats_provider() if self.stats_provider is not None \
+            else None
+
     def global_fts(self) -> np.ndarray:
         """Current f_t per term id (device images rebase stats with this).
 
         Maintained incrementally at ingest, so an image refresh never walks
-        the vocabulary through the store."""
+        the vocabulary through the store.  Under a fleet stats provider the
+        array is the COLLECTION-wide document frequency per local term id —
+        the device image must weight its postings exactly as the fleet
+        oracle would."""
+        stats = self.ranking_stats()
+        if stats is not None:
+            return stats.fts_for(self.vocab)
         return np.asarray(self._fts, dtype=np.int64)
 
     def doclens_array(self) -> np.ndarray:

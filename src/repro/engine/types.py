@@ -76,6 +76,8 @@ class QueryResult:
         return len(self.docids)
 
 
+from ..core.query import CollectionStats  # noqa: E402  (re-export: the
+#   fleet-wide ranking statistics a document-partitioned shard scores with)
 from ..core.query import TermStats  # noqa: E402  (re-export for planner)
 
 
@@ -91,5 +93,8 @@ class EngineStats:
     collations: int = 0
     delta_refreshes: int = 0
     freezes: int = 0          # static-tier freezes completed (lifecycle)
-    tier_epoch: int = 0       # epoch of the published static tier
+    tier_epoch: int = 0       # epoch of the published static tier (for a
+    #                           sharded fleet: the composite epoch — the
+    #                           sum over shards, bumping on any tier swap)
+    num_shards: int = 0       # 0 = single engine; >0 = sharded composite
     by_backend: dict = field(default_factory=dict)

@@ -62,7 +62,14 @@ class QueryService:
 
     def _cache_key(self, query: Query) -> tuple | None:
         """(version, tier epoch, query) — None when the engine exposes no
-        version counter (e.g. a bare sharded fan-out) or caching is off."""
+        version counter or caching is off.  Works identically over a
+        single :class:`~repro.engine.Engine` and a
+        :class:`~repro.core.sharded_index.ShardedEngine`: the sharded
+        fan-out exposes a per-ingest ``version`` and its ``lifecycle`` is
+        the fleet :class:`~repro.core.lifecycle.FreezeCoordinator`, whose
+        composite ``epoch`` (sum over shards) bumps whenever ANY shard
+        swaps its static tier — so a sharded entry can never outlive the
+        tier state it was computed against."""
         if self.cache_size <= 0:
             return None
         version = getattr(self.engine, "version", None)

@@ -1,0 +1,465 @@
+"""ShardedEngine as a first-class engine: exact global ranked statistics
+(byte-identical to a single-engine oracle), arithmetic round-robin docid
+maps, parallel fan-out, coordinated freeze scheduling, and serving-cache
+integration (ISSUE 5)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import static_index as static_index_mod
+from repro.core.lifecycle import FreezeCoordinator, FreezeManager, FreezePolicy
+from repro.core.sharded_index import ShardedEngine
+from repro.engine import Engine, Query
+from repro.serve import QueryService
+
+
+@pytest.fixture(scope="module")
+def stream_docs():
+    rng = np.random.default_rng(1234)
+    vocab = [f"t{i}" for i in range(120)]
+    probs = 1.0 / np.arange(1, 121) ** 1.05
+    probs /= probs.sum()
+    docs = [[vocab[i] for i in rng.choice(120, size=rng.integers(5, 40),
+                                          p=probs)]
+            for _ in range(320)]
+    return vocab, docs
+
+
+def _modes(word_level):
+    base = ["conjunctive", "ranked_tfidf", "bm25"]
+    if word_level:
+        base += ["phrase", "proximity", "bm25_prox"]
+    return base
+
+
+def _assert_byte_identical(se, oracle, terms, mode, k=10):
+    kw = dict(window=5) if mode == "proximity" else {}
+    r = se.execute(Query(terms=terms, mode=mode, k=k, **kw))
+    e = oracle.execute(Query(terms=terms, mode=mode, k=k, backend="host",
+                             **kw))
+    assert r.docids.tolist() == e.docids.tolist(), (mode, terms)
+    if e.scores is not None:
+        # byte-identical: same doubles, same canonical tie order — the
+        # global-statistics exchange leaves no shard-local approximation
+        assert np.array_equal(r.scores, e.scores), (mode, terms)
+
+
+# --------------------------------------------------------------------------
+# the acceptance differential: sharded ≡ single-engine oracle, all modes,
+# with background freezes completing mid-stream under the coordinator
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("word_level", [False, True],
+                         ids=["doc_level", "word_level"])
+def test_sharded_byte_identical_to_oracle_during_freezes(
+        stream_docs, word_level):
+    vocab, docs = stream_docs
+    se = ShardedEngine(
+        num_shards=4, B=64, growth="const", word_level=word_level,
+        tier_policy=FreezePolicy(every_docs=20, background=True),
+        max_in_flight=1)
+    oracle = Engine(B=64, growth="const", word_level=word_level)
+    rng = np.random.default_rng(5 + word_level)
+
+    def check(n=2):
+        for _ in range(n):
+            nt = int(rng.integers(1, 4))
+            terms = tuple(vocab[i] for i in
+                          rng.choice(60, size=nt, replace=False))
+            for mode in _modes(word_level):
+                _assert_byte_identical(se, oracle, terms, mode)
+
+    for i, d in enumerate(docs):
+        g = se.add_document(d)
+        assert g == oracle.add_document(d)   # same global docid stream
+        if i % 9 == 4:
+            check()
+    assert se.coordinator.peak_in_flight <= 1
+    se.drain_freezes()
+    assert all(e.lifecycle.freezes >= 1 for e in se.engines)
+    assert se.coordinator.epoch == sum(e.lifecycle.epoch
+                                       for e in se.engines) > 0
+    check(6)                                 # after every tier swap settled
+
+
+def test_sharded_device_batches_match_oracle(stream_docs):
+    """Batched fan-out routes each shard to its device image (planner
+    default); the rebased (N, f_t, avgdl) make device scores match the
+    global oracle to f32 tolerance."""
+    vocab, docs = stream_docs
+    se = ShardedEngine(num_shards=2, B=64, growth="const")
+    oracle = Engine(B=64, growth="const")
+    for d in docs[:200]:
+        se.add_document(d)
+        oracle.add_document(d)
+    se.collate_now()
+    for d in docs[200:260]:
+        se.add_document(d)
+        oracle.add_document(d)
+    rng = np.random.default_rng(17)
+    for mode in ("ranked_tfidf", "bm25"):
+        batch = [Query(terms=tuple(vocab[i] for i in
+                                   rng.choice(40, size=2, replace=False)),
+                       mode=mode, k=10) for _ in range(6)]
+        res = se.execute_many(batch)
+        assert all(r.backend == "device" for r in res)
+        for r, q in zip(res, batch):
+            e = oracle.execute(Query(terms=q.terms, mode=mode, k=10,
+                                     backend="host"))
+            assert np.allclose(np.sort(r.scores), np.sort(e.scores),
+                               rtol=1e-4), (mode, q.terms)
+
+
+# --------------------------------------------------------------------------
+# round-robin docid arithmetic (no per-document maps)
+# --------------------------------------------------------------------------
+
+
+def test_round_robin_arithmetic(stream_docs):
+    vocab, docs = stream_docs
+    S = 3
+    se = ShardedEngine(num_shards=S, B=64, growth="const")
+    for g, d in enumerate(docs[:50], start=1):
+        assert se.add_document(d) == g
+    assert se.num_docs == 50
+    # global g lives on shard (g-1) % S as local (g-1) // S + 1, and the
+    # affine inverse globalizes exactly
+    for s in range(S):
+        locals_ = np.arange(1, se.engines[s].index.num_docs + 1)
+        gids = se._globalize(s, locals_)
+        assert ((gids - 1) % S == s).all()
+        assert (((gids - 1) // S + 1) == locals_).all()
+    # O(1) routing state: no per-document structures
+    assert not hasattr(se, "_owner") and not hasattr(se, "_to_global")
+
+
+def test_parallel_and_serial_fanout_agree(stream_docs):
+    vocab, docs = stream_docs
+    par = ShardedEngine(num_shards=3, B=64, growth="const", parallel=True)
+    ser = ShardedEngine(num_shards=3, B=64, growth="const", parallel=False)
+    assert par._pool is not None and ser._pool is None
+    for d in docs[:90]:
+        par.add_document(d)
+        ser.add_document(d)
+    rng = np.random.default_rng(23)
+    for _ in range(5):
+        terms = tuple(vocab[i] for i in rng.choice(40, size=2,
+                                                   replace=False))
+        for mode in ("conjunctive", "bm25"):
+            a = par.execute(Query(terms=terms, mode=mode, k=10))
+            b = ser.execute(Query(terms=terms, mode=mode, k=10))
+            assert a.docids.tolist() == b.docids.tolist()
+            if a.scores is not None:
+                assert np.array_equal(a.scores, b.scores)
+
+
+# --------------------------------------------------------------------------
+# backend-set reporting (ISSUE-5 satellite: no more shard_res[0].backend)
+# --------------------------------------------------------------------------
+
+
+def test_fused_result_reports_backend_set(stream_docs):
+    vocab, docs = stream_docs
+    se = ShardedEngine(num_shards=2, B=64, growth="const",
+                       tier_policy=FreezePolicy())
+    for d in docs[:80]:
+        se.add_document(d)
+    # freeze ONLY shard 0: its planner now routes small queries to the
+    # tiered backend while shard 1 stays on the host
+    se.engines[0].lifecycle.freeze(blocking=True)
+    r = se.execute(Query(terms=(vocab[40],), mode="conjunctive"))
+    assert r.backend == "host+tiered", r.backend
+    assert "sharded fan-out x2" in r.reason
+    # homogeneous shards report the single backend, not a list of copies
+    r2 = se.execute(Query(terms=(vocab[40],), mode="conjunctive",
+                          backend="host"))
+    assert r2.backend == "host"
+
+
+# --------------------------------------------------------------------------
+# FreezeCoordinator: the fleet encode budget
+# --------------------------------------------------------------------------
+
+
+class _FakeEngine:
+    """Minimal engine for coordinator unit tests."""
+
+    def __init__(self):
+        from repro.core.index import DynamicIndex
+        self.index = DynamicIndex(B=64, growth="const")
+
+    def collate_now(self):
+        pass
+
+
+def test_coordinator_fifo_and_budget_unit():
+    coord = FreezeCoordinator(max_in_flight=1)
+    a = FreezeManager(_FakeEngine(), FreezePolicy())
+    b = FreezeManager(_FakeEngine(), FreezePolicy())
+    coord.register(a)
+    coord.register(b)
+    assert a.coordinator is coord and b.coordinator is coord
+    assert coord.try_acquire(a)          # slot free -> granted
+    assert not coord.try_acquire(b)      # budget exhausted -> queued
+    assert coord.pending == 1
+    assert not coord.try_acquire(b)      # still queued, not re-queued
+    assert coord.pending == 1
+    coord.release(a)
+    assert coord.try_acquire(b)          # front of queue, slot free
+    assert coord.pending == 0
+    # FIFO fairness: a refused earlier manager may not be overtaken
+    assert not coord.try_acquire(a)      # b holds the slot
+    coord.release(b)
+    assert not coord.try_acquire(b)      # a is ahead in the queue
+    assert coord.try_acquire(a)
+    coord.release(a)
+    assert coord.peak_in_flight == 1
+    assert coord.deferrals >= 3
+    with pytest.raises(ValueError):
+        FreezeCoordinator(max_in_flight=0)
+
+
+@pytest.mark.parametrize("max_in_flight", [1, 2])
+def test_coordinator_caps_concurrent_encodes(stream_docs, max_in_flight,
+                                             monkeypatch):
+    """The acceptance criterion: with num_shards=4 and an aggressive
+    policy, concurrent background encodes never exceed ``max_in_flight``
+    (measured INSIDE StaticIndex.freeze, not self-reported) while every
+    document stays continuously queryable — differential-tested
+    mid-freeze."""
+    vocab, docs = stream_docs
+    lock = threading.Lock()
+    active = [0]
+    peak = [0]
+    real_freeze = static_index_mod.StaticIndex.freeze
+
+    def slow_freeze(index, codec="bp128"):
+        with lock:
+            active[0] += 1
+            peak[0] = max(peak[0], active[0])
+        try:
+            time.sleep(0.01)       # widen the overlap window
+            return real_freeze(index, codec)
+        finally:
+            with lock:
+                active[0] -= 1
+
+    monkeypatch.setattr(static_index_mod.StaticIndex, "freeze", slow_freeze)
+    se = ShardedEngine(
+        num_shards=4, B=64, growth="const",
+        tier_policy=FreezePolicy(every_docs=12, background=True),
+        max_in_flight=max_in_flight)
+    oracle = Engine(B=64, growth="const")
+    rng = np.random.default_rng(31)
+    saw_in_flight = False
+    for i, d in enumerate(docs[:240]):
+        se.add_document(d)
+        oracle.add_document(d)
+        saw_in_flight |= any(e.lifecycle.in_flight for e in se.engines)
+        if i % 6 == 2:
+            terms = tuple(vocab[j] for j in
+                          rng.choice(40, size=2, replace=False))
+            _assert_byte_identical(se, oracle, terms, "bm25")
+            _assert_byte_identical(se, oracle, terms, "conjunctive")
+    se.drain_freezes()
+    assert saw_in_flight, "no background freeze ever overlapped the stream"
+    assert peak[0] <= max_in_flight, \
+        f"{peak[0]} concurrent encodes exceeded the budget {max_in_flight}"
+    assert se.coordinator.peak_in_flight <= max_in_flight
+    assert all(e.lifecycle.freezes >= 1 for e in se.engines), \
+        "a shard starved: staggering must still freeze every shard"
+    if max_in_flight == 1:
+        assert se.coordinator.deferrals > 0, \
+            "aggressive policy on 4 shards should have contended for slots"
+
+
+def test_deferred_freeze_pumped_by_any_shard_ingest(stream_docs,
+                                                    monkeypatch):
+    """Liveness: the fleet shares one writer thread, so a shard whose slot
+    request was refused retries on ANY fleet ingest — a queue-head shard
+    that happens to receive no documents cannot wedge the FIFO."""
+    vocab, docs = stream_docs
+    se = ShardedEngine(num_shards=2, B=64, growth="const",
+                       tier_policy=FreezePolicy(every_docs=10 ** 9,
+                                                background=True),
+                       max_in_flight=1)
+    for d in docs[:41]:
+        se.add_document(d)
+    # shard 1's encode holds the slot for a while
+    real_freeze = static_index_mod.StaticIndex.freeze
+
+    def slow_freeze(index, codec="bp128"):
+        time.sleep(0.15)
+        return real_freeze(index, codec)
+
+    monkeypatch.setattr(static_index_mod.StaticIndex, "freeze", slow_freeze)
+    assert se.engines[1].lifecycle.freeze(blocking=False)
+    # make shard 0 due and refused -> queued behind the busy slot
+    mgr0 = se.engines[0].lifecycle
+    monkeypatch.setattr(mgr0, "policy", FreezePolicy(every_docs=1,
+                                                     background=True))
+    assert not mgr0.maybe_freeze()            # slot busy -> deferred
+    assert se.coordinator.pending == 1
+    se.engines[1].lifecycle.wait()            # slot frees
+    # the next ingest routes to shard 1 (num_docs=41 is odd -> global 42
+    # lands on shard (42-1) % 2 = 1), NOT to queued shard 0 — only the
+    # fleet-level pump can start shard 0's deferred freeze here
+    assert se.num_docs % 2 == 1
+    se.add_document(docs[41])
+    assert mgr0.in_flight or mgr0.epoch == 1, \
+        "queued freeze was not pumped by another shard's ingest"
+    se.drain_freezes()
+    assert mgr0.epoch >= 1
+    se.close()
+
+
+def test_failed_snapshot_releases_encode_slot(stream_docs, monkeypatch):
+    """A collate/clone failure after the slot grant must release the slot —
+    a leak would silently disable every later freeze in the fleet."""
+    vocab, docs = stream_docs
+    se = ShardedEngine(num_shards=2, B=64, growth="const",
+                       tier_policy=FreezePolicy(), max_in_flight=1)
+    for d in docs[:30]:
+        se.add_document(d)
+    eng = se.engines[0]
+
+    def boom():
+        raise MemoryError("collation failed")
+
+    monkeypatch.setattr(eng, "collate_now", boom)
+    with pytest.raises(MemoryError):
+        eng.lifecycle.freeze(blocking=False)
+    monkeypatch.undo()
+    assert se.coordinator.in_flight == 0, "encode slot leaked"
+    # the budget is intact: both shards can still freeze
+    assert se.engines[1].lifecycle.freeze(blocking=True)
+    assert se.engines[0].lifecycle.freeze(blocking=True)
+    se.close()
+
+
+def test_close_releases_pool(stream_docs):
+    vocab, docs = stream_docs
+    se = ShardedEngine(num_shards=3, B=64, growth="const")
+    for d in docs[:30]:
+        se.add_document(d)
+    assert se._pool is not None
+    se.close()
+    assert se._pool is None
+    se.close()                                # idempotent
+    # still serves, just serially
+    r = se.execute(Query(terms=(vocab[0],), mode="conjunctive"))
+    assert len(r.docids) > 0
+    with ShardedEngine(num_shards=2, B=64, growth="const") as ctx:
+        ctx.add_document(docs[0])
+        assert ctx._pool is not None
+    assert ctx._pool is None
+
+
+def test_blocking_freeze_waits_for_budget(stream_docs):
+    """A synchronous freeze under a coordinator still respects the encode
+    budget: it waits for the in-flight background encode, never runs
+    beside it."""
+    vocab, docs = stream_docs
+    se = ShardedEngine(num_shards=2, B=64, growth="const",
+                       tier_policy=FreezePolicy(), max_in_flight=1)
+    for d in docs[:60]:
+        se.add_document(d)
+    assert se.engines[0].lifecycle.freeze(blocking=False)   # takes the slot
+    se.engines[1].lifecycle.freeze(blocking=True)           # must wait
+    se.drain_freezes()
+    assert se.coordinator.peak_in_flight == 1
+    assert se.engines[0].lifecycle.epoch == 1
+    assert se.engines[1].lifecycle.epoch == 1
+
+
+# --------------------------------------------------------------------------
+# serving-cache integration (ISSUE-5 satellite: no silent cache bypass)
+# --------------------------------------------------------------------------
+
+
+def test_sharded_results_are_cached_and_invalidated(stream_docs):
+    vocab, docs = stream_docs
+    se = ShardedEngine(num_shards=3, B=64, growth="const",
+                       tier_policy=FreezePolicy())
+    svc = QueryService(se, max_batch=4, cache_size=32)
+    for d in docs[:60]:
+        svc.ingest(d)
+    q = Query(terms=(vocab[0], vocab[3]), mode="bm25", k=10)
+    r1 = svc.query(q)
+    assert svc.cache_misses == 1 and svc.cache_hits == 0
+    r2 = svc.query(q)                     # version+epoch unchanged -> HIT
+    assert svc.cache_hits == 1
+    assert r2.docids.tolist() == r1.docids.tolist()
+    assert np.array_equal(r2.scores, r1.scores)
+    # ingest bumps the composite version -> old entries unreachable
+    svc.ingest(docs[60])
+    svc.query(q)
+    assert svc.cache_misses == 2
+    # ANY shard's tier swap bumps the composite epoch -> invalidated too
+    svc.query(q)
+    assert svc.cache_hits == 2
+    se.engines[1].lifecycle.freeze(blocking=True)
+    r3 = svc.query(q)
+    assert svc.cache_misses == 3, \
+        "a shard tier swap must invalidate the sharded result cache"
+    # and the post-swap result is still the oracle's
+    oracle = Engine(B=64, growth="const")
+    for d in docs[:61]:
+        oracle.add_document(d)
+    e = oracle.execute(Query(terms=q.terms, mode="bm25", k=10,
+                             backend="host"))
+    assert r3.docids.tolist() == e.docids.tolist()
+    assert np.array_equal(r3.scores, e.scores)
+
+
+# --------------------------------------------------------------------------
+# composite observability
+# --------------------------------------------------------------------------
+
+
+def test_incremental_gft_cache_matches_naive_walk(stream_docs):
+    """The per-shard aligned global-f_t arrays (value-updated at ingest,
+    suffix-extended at read) must always equal the naive dict walk over
+    the shard vocabulary — including terms a shard interns late and device
+    refreshes interleaved with ingest."""
+    vocab, docs = stream_docs
+    se = ShardedEngine(num_shards=3, B=64, growth="const")
+    rng = np.random.default_rng(41)
+    for i, d in enumerate(docs[:150]):
+        se.add_document(d)
+        if i % 25 == 7:
+            # materialize + refresh the cached arrays mid-stream (the
+            # device path is what reads them)
+            se.execute_many([Query(terms=(vocab[0], vocab[1]), mode="bm25",
+                                   k=5)] * 4)
+        if i % 10 == 3:
+            for e in se.engines:
+                got = e.global_fts()
+                naive = np.asarray([se._ft.get(tb, 0) for tb in e.vocab],
+                                   dtype=np.int64)
+                assert np.array_equal(got, naive)
+    se.close()
+
+
+def test_composite_stats(stream_docs):
+    vocab, docs = stream_docs
+    se = ShardedEngine(num_shards=3, B=64, growth="const",
+                       tier_policy=FreezePolicy(every_docs=30,
+                                                background=False))
+    for d in docs[:100]:
+        se.add_document(d)
+    se.execute(Query(terms=(vocab[0],), mode="conjunctive"))
+    s = se.stats()
+    assert s.num_docs == 100 == se.num_docs
+    assert s.num_shards == 3
+    assert s.num_postings == sum(e.index.num_postings for e in se.engines)
+    assert s.num_postings == se.num_postings
+    assert s.freezes == sum(e.lifecycle.freezes for e in se.engines) > 0
+    assert s.tier_epoch == se.coordinator.epoch > 0
+    assert s.queries == 3                 # one per shard fan-out
+    assert sum(s.by_backend.values()) == 3
+    assert s.vocab_size == len({t for d in docs[:100] for t in d})

@@ -21,6 +21,7 @@ SCRIPT = textwrap.dedent("""
     from repro.core.device_index import build_device_image
     from repro.core.query import ranked_disjunctive_taat
     from repro.core.sharded_index import (make_sharded_query_step,
+                                          shard_doc_offsets,
                                           sharded_input_specs, stack_images)
 
     rng = np.random.default_rng(7)
@@ -44,7 +45,7 @@ SCRIPT = textwrap.dedent("""
     images = [build_device_image(sh, vb) for sh in shards]
     # pad metadata vocab-aligned; stack along shard axis
     img = stack_images(images)
-    NBs = img.blocks.shape[0] // S
+    offs = shard_doc_offsets(images)
     # local slots are relative to each shard's own block array: offset them
     mesh = jax.make_mesh((S, 2), ("data", "model"))
     mb = int(max(im.term_nblk.max() for im in images))
@@ -62,7 +63,7 @@ SCRIPT = textwrap.dedent("""
         qm[qi, :len(terms)] = True
     with mesh:
         d, s = jf(img.blocks, img.term_slot, img.term_nblk, img.term_skip,
-                  img.term_nx, img.term_ft, jnp.asarray(qt),
+                  img.term_nx, img.term_ft, offs, jnp.asarray(qt),
                   jnp.asarray(qm))
     d, s = np.asarray(d), np.asarray(s)
     # host oracle: score per shard, globalize ids, merge
@@ -84,14 +85,123 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-@pytest.mark.slow
-def test_sharded_query_matches_host_merge():
-    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+# the rank-offset globalization pin: shards of DIFFERENT document counts.
+# Global docids must decode as offsets[s] + local (exclusive prefix sum of
+# the shards' own num_docs) — a uniform `rank * max(num_docs)` stride, which
+# stack_images' old num_docs=max(...) invited, misplaces every docid of
+# every shard after the first smaller one.
+UNEQUAL_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.index import DynamicIndex
+    from repro.core.collate import collate
+    from repro.core.device_index import build_device_image, with_global_stats
+    from repro.core.query import CollectionStats, ranked_disjunctive_taat
+    from repro.core.sharded_index import (make_sharded_query_step,
+                                          shard_doc_offsets, stack_images)
+
+    rng = np.random.default_rng(11)
+    VOCAB = [f"w{i}" for i in range(100)]
+    vb = [t.encode() for t in VOCAB]
+    probs = 1.0 / np.arange(1, 101) ** 1.07
+    probs /= probs.sum()
+    sizes = [150, 90, 140, 60]          # deliberately unequal
+    total = sum(sizes)
+    S = len(sizes)
+    shards = []
+    for n in sizes:
+        idx = DynamicIndex(B=64, growth="const")
+        for _ in range(n):
+            idx.add_document([VOCAB[i] for i in
+                              rng.choice(100, size=rng.integers(8, 60),
+                                         p=probs)])
+        shards.append(collate(idx))
+    images = [build_device_image(sh, vb) for sh in shards]
+    # exact GLOBAL ranked statistics: rebase every shard's term_ft to the
+    # collection-wide document frequency (the with_global_stats seam) and
+    # score with N = total — per-shard top-k then merges exactly
+    gft = np.stack([np.asarray(im.term_ft) for im in images]).sum(axis=0)
+    images = [with_global_stats(im, gft, im.num_docs) for im in images]
+    img = stack_images(images)
+    offs_host = [0]
+    for n in sizes[:-1]:
+        offs_host.append(offs_host[-1] + n)
+    offs = shard_doc_offsets(images)
+    assert offs.tolist() == offs_host
+    assert img.num_docs == total        # collection total, not max
+    mesh = jax.make_mesh((S, 2), ("data", "model"))
+    mb = int(max(im.term_nblk.max() for im in images))
+    fn, ins, outs = make_sharded_query_step(mesh, k=10, max_blocks=mb,
+                                            num_docs=total)
+    jf = jax.jit(fn, in_shardings=ins, out_shardings=outs)
+    Q, T = 4, 3
+    qt = np.zeros((Q, T), np.int32)
+    qm = np.zeros((Q, T), bool)
+    queries = []
+    for qi in range(Q):
+        terms = rng.choice(50, size=rng.integers(1, T + 1), replace=False)
+        queries.append(terms)
+        qt[qi, :len(terms)] = terms
+        qm[qi, :len(terms)] = True
+    with mesh:
+        d, s = jf(img.blocks, img.term_slot, img.term_nblk, img.term_skip,
+                  img.term_nx, img.term_ft, offs, jnp.asarray(qt),
+                  jnp.asarray(qm))
+    d, s = np.asarray(d), np.asarray(s)
+    # GLOBAL-stats host oracle, addressed BY GLOBAL DOCID: every returned
+    # (gid, score) must decode to a real document of the owning shard whose
+    # oracle score matches — this pins the offset mapping itself,
+    # independent of tie order at the k boundary
+    gstats = CollectionStats(
+        num_docs=total, avg_doclen=0.0,
+        ft={vb[i]: int(gft[i]) for i in range(len(vb))})
+    ok = True
+    for qi, terms in enumerate(queries):
+        oracle = {}
+        for si, sh in enumerate(shards):
+            dd, ss = ranked_disjunctive_taat(sh, [VOCAB[i] for i in terms],
+                                             k=sizes[si], stats=gstats)
+            for ddi, ssi in zip(dd, ss):
+                oracle[offs_host[si] + int(ddi)] = float(ssi)
+        merged = sorted(oracle.values(), reverse=True)[:10]
+        got_s = sorted(s[qi][s[qi] > 0].tolist(), reverse=True)
+        if not np.allclose(got_s, merged[:len(got_s)], rtol=1e-4):
+            ok = False
+            print("SCORE MISMATCH", qi, got_s[:5], merged[:5])
+        for gid, sc in zip(d[qi], s[qi]):
+            if sc <= 0:
+                continue
+            gid = int(gid)
+            if gid not in oracle:
+                ok = False
+                print("BAD GID", qi, gid)
+            elif not np.isclose(oracle[gid], float(sc), rtol=1e-4):
+                ok = False
+                print("GID/SCORE MISMATCH", qi, gid, oracle[gid], float(sc))
+    print(json.dumps({"ok": ok}))
+""")
+
+
+def _run(script):
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, timeout=600,
                          env=dict(os.environ, PYTHONPATH="src"))
     assert out.returncode == 0, out.stderr[-3000:]
     last = [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
     assert json.loads(last)["ok"], out.stdout[-2000:]
+
+
+@pytest.mark.slow
+def test_sharded_query_matches_host_merge():
+    _run(SCRIPT)
+
+
+@pytest.mark.slow
+def test_sharded_unequal_shard_sizes_globalize_exactly():
+    _run(UNEQUAL_SCRIPT)
 
 
 @pytest.mark.slow
