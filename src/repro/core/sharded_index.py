@@ -215,9 +215,12 @@ class ShardedEngine:
     Documents are assigned round-robin; each shard runs a full
     ``repro.engine.Engine`` (its planner may independently pick host,
     device, Pallas, or tiered execution, and its device image refreshes
-    incrementally).  Queries fan out to every shard — on a thread pool, so
-    fan-out wall-clock is the max over shards, not the sum — and results
-    fuse:
+    incrementally — each shard owns a
+    :class:`~repro.engine.device_backend.ResidentImageManager`, so its
+    frozen block array uploads once per shard freeze and batched fan-out
+    queries reuse the per-shard resident images across flushes).  Queries
+    fan out to every shard — on a thread pool, so fan-out wall-clock is
+    the max over shards, not the sum — and results fuse:
 
       * boolean modes (conjunctive / phrase / proximity) — per-shard docid
         lists are globalized and concatenated (docid spaces are disjoint,
@@ -478,6 +481,8 @@ class ShardedEngine:
             agg.queries += s.queries
             agg.collations += s.collations
             agg.delta_refreshes += s.delta_refreshes
+            agg.delta_compactions += s.delta_compactions
+            agg.resident_uploads += s.resident_uploads
             agg.freezes += s.freezes
             for k, v in s.by_backend.items():
                 agg.by_backend[k] = agg.by_backend.get(k, 0) + v

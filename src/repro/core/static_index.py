@@ -214,6 +214,15 @@ class TermList:
     sum_w: int = 0                     # word-level: sum of all w-gaps
     w_bits: np.ndarray | None = None   # word-level (bp128): derived lazily
     occ_before: np.ndarray | None = None  # word-level (bp128): derived
+    blk_cache: dict | None = None      # decoded-block cache, lazily created
+    #   by the first cursor: {block j: (docids, payloads)}.  Shared across
+    #   cursors — serving creates a FRESH cursor per query, so without it
+    #   every query re-runs the per-value bp128 unpack loops for the same
+    #   hot blocks (the dominant cost of tiered conjunctive latency).  The
+    #   arrays are read-only by contract; worst case it holds the decoded
+    #   form of every touched block (~4× the compressed bytes, hot terms
+    #   only).  Benign under concurrent readers: a lost race merely
+    #   decodes a block twice.
 
 
 class StaticIndex:
@@ -551,6 +560,13 @@ class StaticPostingsCursor:
 
     def _load_block(self, j: int) -> None:
         rec = self.rec
+        if rec.blk_cache is None:
+            rec.blk_cache = {}
+        hit = rec.blk_cache.get(j)
+        if hit is not None:
+            self._d, self._f = hit
+            self._blk = j
+            return
         if self.static.codec == "interp":
             # one "block" = the whole list
             r = BitReader(rec.words)
@@ -562,6 +578,7 @@ class StaticPostingsCursor:
             self._d = np.asarray(docids, dtype=np.int64)
             self._f = np.diff(csum, prepend=0)
             self._blk = 0
+            rec.blk_cache[0] = (self._d, self._f)
             return
         d_bits, f_bits = self.static._block_offsets(rec)
         cnt = min(BP_BLOCK, rec.n - j * BP_BLOCK)
@@ -574,6 +591,7 @@ class StaticPostingsCursor:
         self._d = base + np.cumsum(gaps)
         self._f = fs
         self._blk = j
+        rec.blk_cache[j] = (self._d, self._f)
 
     def _advance_to(self, j: int, k: int) -> None:
         self._k = k

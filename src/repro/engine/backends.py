@@ -266,18 +266,54 @@ class TieredBackend(Backend):
 class PallasBackend(Backend):
     """Route through the Pallas kernels via ``kernels/registry``.
 
-    Postings are decoded host-side (the live chains are host memory); the
-    compute-heavy comparisons run in the kernels: sorted-list membership for
-    conjunctive AND, masked-matmul score accumulation + top-k for ranked
-    modes.  ``interpret`` defaults to interpret-mode off only on real TPUs.
+    On a Const-mode doc-level engine the three term-query modes run the
+    FUSED path: one ``fused_query`` launch (decode → score → top-k inside
+    the kernel) per (mode, k) group over the engine's resident
+    frozen+delta device images — shared with the device backend, so the
+    frozen block array uploads once per freeze epoch regardless of which
+    backend serves the stream.
+
+    Index layouts without device images (variable-block growth) fall back
+    to the legacy per-op path: postings decoded host-side (the live chains
+    are host memory), compute-heavy comparisons in individual kernels —
+    sorted-list membership for conjunctive AND, score accumulation + top-k
+    for ranked modes.  ``interpret`` defaults to interpret-mode off only
+    on real TPUs.
     """
 
     name = "pallas"
 
-    def __init__(self, engine, interpret: bool | None = None):
+    def __init__(self, engine, interpret: bool | None = None,
+                 resident=None):
         super().__init__(engine)
         self.interpret = (registry.default_interpret()
                           if interpret is None else interpret)
+        self.resident = resident  # shared ResidentImageManager (or None)
+
+    def execute_many(self, queries: list[Query]) -> list[QueryResult]:
+        # lazy import: device_backend imports this module for Backend
+        from .device_backend import fused_execute
+        from ..kernels.fused_query import FUSED_MODES
+        eng = self.engine
+        fused_ok = self.resident is not None and eng.device_capable
+        out: list[QueryResult | None] = [None] * len(queries)
+        groups: dict[tuple[str, int], list[int]] = {}
+        for i, q in enumerate(queries):
+            if fused_ok and q.mode in FUSED_MODES:
+                groups.setdefault((q.mode, q.k), []).append(i)
+            else:
+                out[i] = self.execute(q)
+        if groups:
+            self.resident.refresh()
+            for (mode, k), idxs in groups.items():
+                res = fused_execute(eng, self.resident,
+                                    [queries[i] for i in idxs], mode, k,
+                                    flavor="pallas",
+                                    interpret=self.interpret,
+                                    name=self.name)
+                for i, r in zip(idxs, res):
+                    out[i] = r
+        return out  # type: ignore[return-value]
 
     # -- mode implementations -------------------------------------------
 

@@ -21,7 +21,7 @@ from .backends import (
     TieredBackend,
     UnsupportedQueryError,
 )
-from .device_backend import DeviceBackend
+from .device_backend import DeviceBackend, ResidentImageManager
 from .planner import Planner, PlannerConfig
 from .types import POSITIONAL_MODES, EngineStats, Query, QueryResult
 
@@ -47,6 +47,14 @@ class Engine:
         fraction of the frozen image triggers a full collation first —
         bounding delta size (and device query cost) without ever collating
         on the query path for small deltas.
+    delta_compact_frac / delta_compact_min_blocks:
+        fragmentation-threshold compaction for the device refresh itself:
+        when the PROJECTED delta (new blocks + one copied tail per changed
+        term, an O(V) counter compare) exceeds BOTH the fraction of the
+        store and the absolute block floor, refresh falls back to a full
+        collation — past that point the incremental chain walk costs more
+        than rebuilding (BENCH_engine.json, delta section).  The floor
+        keeps small indexes on the honest incremental path; None disables.
     tier_policy:
         enable the tiered static lifecycle (``core.lifecycle``): a
         :class:`~repro.core.lifecycle.FreezeManager` converts the frozen
@@ -62,11 +70,15 @@ class Engine:
                  force_backend: str | None = None,
                  decode_fn=None, interpret: bool | None = None,
                  auto_collate_delta_frac: float | None = None,
+                 delta_compact_frac: float | None = 0.25,
+                 delta_compact_min_blocks: int = 512,
                  tier_policy: FreezePolicy | None = None):
         self.index = index if index is not None else DynamicIndex(
             B=B, growth=growth, F=F, word_level=word_level)
         self.planner = Planner(planner, force_backend)
         self.auto_collate_delta_frac = auto_collate_delta_frac
+        self.delta_compact_frac = delta_compact_frac
+        self.delta_compact_min_blocks = delta_compact_min_blocks
         self.version = 0                  # bumps per ingested document
         # when this engine is one shard of a document-partitioned fleet,
         # the fan-out layer installs a callable returning the fleet-wide
@@ -79,10 +91,15 @@ class Engine:
         self._fts: list[int] = []         # tid -> f_t, maintained at ingest
         self._doclens: list[int] = [0]    # 1-indexed via position-0 pad
         self.stats_counters = EngineStats()
+        # ONE resident device-image manager shared by the device and pallas
+        # backends: a mixed stream pays for at most one frozen upload and
+        # one delta rebuild per engine version
+        self.resident = ResidentImageManager(self, decode_fn=decode_fn)
         self.backends = {
             "host": HostBackend(self),
-            "device": DeviceBackend(self, decode_fn=decode_fn),
-            "pallas": PallasBackend(self, interpret=interpret),
+            "device": DeviceBackend(self, resident=self.resident),
+            "pallas": PallasBackend(self, interpret=interpret,
+                                    resident=self.resident),
             "tiered": TieredBackend(self),
         }
         self.lifecycle: FreezeManager | None = None
@@ -197,15 +214,14 @@ class Engine:
         self.index = collate(self.index)
         self.stats_counters.collations += 1
         if self.device_capable:
-            self.backends["device"].freeze()
+            self.resident.freeze()
 
     def _maybe_auto_collate(self) -> None:
         frac = self.auto_collate_delta_frac
         if frac is None:
             return
-        dev: DeviceBackend = self.backends["device"]
         total = max(1, self.index.store.nblocks)
-        if dev.delta_blocks > frac * total:
+        if self.resident.delta_blocks > frac * total:
             self.collate_now()
 
     # ------------------------------------------------------------------

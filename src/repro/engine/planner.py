@@ -16,7 +16,11 @@ rivals execution cost.  Routing rules, in priority order:
    kernels, which decode postings host-side;
 3. batches of ``device_min_batch`` or more queries go to the device image:
    batched fixed-shape execution amortizes the dispatch and the gather
-   touches every query's chains in one fused program;
+   touches every query's chains in one fused program.  When the config
+   carries a measured :class:`CrossoverTable` (engine_bench.py sweep),
+   the threshold is the per-mode batch size at which the device — or the
+   fused Pallas kernel — actually beat the host, replacing the static
+   guess; a mode where neither ever won is never batch-routed off host;
 4. single/small queries whose candidate volume (min f_t for conjunctive —
    the driver of DAAT cost — or Σ f_t for ranked) exceeds
    ``pallas_min_postings`` go to the Pallas kernels;
@@ -36,15 +40,88 @@ rivals execution cost.  Routing rules, in priority order:
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import NamedTuple
 
 from .types import POSITIONAL_MODES, Query, TermStats
 
 
 @dataclass(frozen=True)
+class CrossoverTable:
+    """Measured device-routing crossovers, derived from benchmark sweeps.
+
+    ``min_batch[mode][backend]`` is the smallest measured batch size at
+    which ``backend`` ("device" or "pallas") beat the host's steady-state
+    µs/query at EVERY swept collection size (conservative: a backend must
+    win across sizes before the planner prefers it), or None when it never
+    won.  Built by ``benchmarks/engine_bench.py`` from its workload ×
+    collection size × batch size sweep and stored in
+    ``BENCH_engine.json["crossover"]`` — :meth:`from_bench` re-derives the
+    table from that file, so planner thresholds are measurements, not
+    guesses.
+    """
+
+    min_batch: dict = field(default_factory=dict)
+
+    @classmethod
+    def from_rows(cls, rows) -> "CrossoverTable":
+        """Derive the table from sweep rows: dicts with ``workload``,
+        ``backend``, ``size``, ``batch``, ``us_per_query`` (steady-state)."""
+        cells: dict[tuple, dict[str, float]] = {}
+        for r in rows:
+            key = (r["workload"], int(r["batch"]), int(r["size"]))
+            cells.setdefault(key, {})[r["backend"]] = float(r["us_per_query"])
+        modes = sorted({k[0] for k in cells})
+        batches = sorted({k[1] for k in cells})
+        table: dict[str, dict[str, int | None]] = {}
+        for mode in modes:
+            table[mode] = {}
+            for backend in ("device", "pallas"):
+                win = None
+                for b in batches:
+                    group = [v for k, v in cells.items()
+                             if k[0] == mode and k[1] == b]
+                    if group and all(backend in v and "host" in v
+                                     and v[backend] < v["host"]
+                                     for v in group):
+                        win = b
+                        break
+                table[mode][backend] = win
+        return cls(min_batch=table)
+
+    @classmethod
+    def from_bench(cls, path: str = "BENCH_engine.json") -> "CrossoverTable":
+        """Load the sweep rows recorded by ``engine_bench.py`` and re-derive
+        the crossover thresholds from them."""
+        import json
+        with open(path) as fh:
+            payload = json.load(fh)
+        return cls.from_rows(payload["crossover"]["rows"])
+
+    def min_batch_for(self, mode: str, backend: str) -> int | None:
+        """Measured min winning batch for (mode, backend); None = never won
+        or mode not swept (caller falls back to static defaults)."""
+        per_mode = self.min_batch.get(mode)
+        if per_mode is None:
+            return None
+        return per_mode.get(backend)
+
+    @property
+    def swept_modes(self) -> tuple[str, ...]:
+        return tuple(self.min_batch)
+
+
+@dataclass(frozen=True)
 class PlannerConfig:
-    """Thresholds for the routing rules (see module docstring)."""
+    """Thresholds for the routing rules (see module docstring).
+
+    When ``crossover`` is set (a :class:`CrossoverTable` from
+    ``engine_bench.py`` measurements), the batch-size device/pallas rules
+    use its per-mode measured thresholds instead of ``device_min_batch``;
+    modes the sweep never measured keep the static default, and a mode
+    where the accelerated path never beat the host is never batch-routed
+    to it.
+    """
 
     device_min_batch: int = 4       # batch size at which the device image wins
     pallas_min_postings: int = 2048  # candidate volume at which kernels win
@@ -52,6 +129,7 @@ class PlannerConfig:
     allow_device: bool = True
     allow_pallas: bool = True
     allow_tiered: bool = True
+    crossover: CrossoverTable | None = None  # measured thresholds (bench)
 
 
 class PlanDecision(NamedTuple):
@@ -104,10 +182,26 @@ class Planner:
                     f"{query.mode} served from the compressed ⟨d,w⟩ tier")
             return PlanDecision("host",
                                 f"{query.mode} requires word positions")
-        if (cfg.allow_device and device_capable
-                and batch_size >= cfg.device_min_batch):
-            return PlanDecision(
-                "device", f"batch of {batch_size} amortizes device dispatch")
+        if cfg.allow_device and device_capable:
+            if cfg.crossover is not None \
+                    and query.mode in cfg.crossover.swept_modes:
+                mb = cfg.crossover.min_batch_for(query.mode, "device")
+                if mb is not None and batch_size >= mb:
+                    return PlanDecision(
+                        "device", f"measured crossover: device wins "
+                                  f"{query.mode} at batch >= {mb}")
+            elif batch_size >= cfg.device_min_batch:
+                return PlanDecision(
+                    "device",
+                    f"batch of {batch_size} amortizes device dispatch")
+        if (cfg.allow_pallas and pallas_capable and device_capable
+                and cfg.crossover is not None
+                and query.mode in cfg.crossover.swept_modes):
+            mb = cfg.crossover.min_batch_for(query.mode, "pallas")
+            if mb is not None and batch_size >= mb:
+                return PlanDecision(
+                    "pallas", f"measured crossover: fused kernel wins "
+                              f"{query.mode} at batch >= {mb}")
         fts = [s.ft for s in stats if s.ft > 0]
         if not fts:
             return PlanDecision("host", "no term statistics (empty terms)")

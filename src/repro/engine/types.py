@@ -92,6 +92,9 @@ class EngineStats:
     queries: int = 0
     collations: int = 0
     delta_refreshes: int = 0
+    delta_compactions: int = 0  # refreshes that hit the fragmentation
+    #                             threshold and collated instead
+    resident_uploads: int = 0   # full device-image uploads (1 per freeze)
     freezes: int = 0          # static-tier freezes completed (lifecycle)
     tier_epoch: int = 0       # epoch of the published static tier (for a
     #                           sharded fleet: the composite epoch — the

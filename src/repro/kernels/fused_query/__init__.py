@@ -1,0 +1,3 @@
+"""Fused decode→score→top-k query kernel (see ops.py)."""
+
+from .ops import FUSED_MODES, fused_query  # noqa: F401

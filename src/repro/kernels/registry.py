@@ -24,6 +24,7 @@ _OPS_MODULES = {
     "topk_score": "repro.kernels.topk_score.ops",
     "dvbyte_decode": "repro.kernels.dvbyte_decode.ops",
     "retrieval_dot": "repro.kernels.retrieval_dot.ops",
+    "fused_query": "repro.kernels.fused_query.ops",
 }
 
 _REGISTRY: dict[str, "KernelSpec"] = {}

@@ -112,7 +112,10 @@ class QueryService:
     def flush(self) -> list[Ticket]:
         """Execute every pending query as one planned batch (cache-aware:
         hits are filled without touching the engine; one engine batch runs
-        the misses)."""
+        the misses).  Duplicate queries within a flush execute once — the
+        engine batch carries unique queries only (the fused device path
+        then decodes each term chain set once per flush), and duplicates
+        are fanned back out as private result copies."""
         batch, self._pending = self._pending, []
         if not batch:
             return []
@@ -133,9 +136,18 @@ class QueryService:
                 self.cache_misses += key is not None
                 misses.append((t, key))
         if misses:
-            results = self.engine.execute_many([t.query for t, _ in misses])
-            for (t, key), r in zip(misses, results):
-                t.result = r
+            unique: dict = {}        # Query -> slot in the executed batch
+            for t, _ in misses:
+                unique.setdefault(t.query, len(unique))
+            results = self.engine.execute_many(list(unique))
+            handed: set[int] = set()
+            for t, key in misses:
+                slot = unique[t.query]
+                r = results[slot]
+                # the first ticket of each query takes the result object;
+                # duplicates get copies (results are mutable arrays)
+                t.result = r if slot not in handed else self._copy_result(r)
+                handed.add(slot)
                 if key is not None:
                     self._cache[key] = self._copy_result(r)
                     while len(self._cache) > self.cache_size:

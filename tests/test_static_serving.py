@@ -117,6 +117,35 @@ def test_bp128_seek_decodes_single_block():
     assert c._blk == 6  # jumped straight to the containing block
 
 
+def test_block_cache_shared_across_cursors(monkeypatch):
+    """A fresh cursor per query must not re-decode blocks an earlier cursor
+    already decoded: decoded blocks are cached on the shared TermList."""
+    import repro.core.static_index as si
+
+    rng = np.random.default_rng(7)
+    docids = np.cumsum(rng.integers(1, 20, 4 * BP_BLOCK))
+    fs = np.ones(len(docids), np.int64)
+    st = _roundtrip("bp128", docids.tolist(), fs.tolist())
+
+    calls = []
+    real = si.bp_decode
+    monkeypatch.setattr(si, "bp_decode", lambda n, r: calls.append(n) or real(n, r))
+
+    target = int(docids[2 * BP_BLOCK + 3])
+    c1 = st.postings_iter(b"t")
+    assert c1.seek_geq(target) and c1.docid == target
+    first = len(calls)
+    assert first > 0
+    # a second cursor over the same term hits the cache for block 0 (eager
+    # load) and the seek target block — zero new decode work
+    c2 = st.postings_iter(b"t")
+    assert c2.seek_geq(target) and c2.docid == target
+    assert len(calls) == first
+    # within-block re-seek on the same cursor is also free
+    assert c1.seek_geq(target + 1)
+    assert len(calls) == first
+
+
 def test_chained_cursor_spans_tiers(zipf_docs):
     """ChainedCursor(static prefix, dynamic suffix) behaves like one cursor
     over the whole collection."""
