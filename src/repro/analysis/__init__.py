@@ -1,0 +1,41 @@
+"""repro.analysis — static invariant checker + runtime concurrency sanitizer.
+
+Run the static pass over the repo::
+
+    python -m repro.analysis [--root DIR] [--allowlist FILE] [--json]
+
+Checks (see each module's docstring for the full contract):
+
+* :mod:`.locks`     — lock-discipline lint over the annotated concurrent
+  modules (``guarded_by`` / ``requires`` / ``published`` / ``writer_only``
+  / ``gil_shared``, see :mod:`.annotations`);
+* :mod:`.protocol`  — cursor-protocol conformance for every class exposing
+  ``next``/``seek_geq``, and kernel-package layout/registry/signature
+  conformance;
+* :mod:`.purity`    — kernel purity (no host syncs, no branching on traced
+  values, no clocks/randomness) for ``kernels/*/{ref,kernel}.py``.
+
+Runtime companions:
+
+* :class:`.contracts.ContractCursor` — contract-asserting cursor proxy
+  used by the differential tests;
+* :class:`.sanitizer.Sanitizer` — instrumented locks (lock-order
+  inversion detection) + Eraser-style field race detection, enabled by
+  ``pytest --sanitize`` / ``REPRO_SANITIZE=1``.
+
+Exit status of the CLI is non-zero iff unsuppressed findings (or stale
+allowlist entries) exist; reviewed exceptions live in
+``analysis_allowlist.txt`` at the repo root, one stable ident per line.
+"""
+
+from . import annotations, locks, protocol, purity
+from .contracts import ContractCursor, ContractViolation, wrap
+from .report import Allowlist, Finding, apply_allowlist
+from .sanitizer import Sanitizer, env_enabled
+
+__all__ = [
+    "annotations", "locks", "protocol", "purity",
+    "ContractCursor", "ContractViolation", "wrap",
+    "Allowlist", "Finding", "apply_allowlist",
+    "Sanitizer", "env_enabled",
+]

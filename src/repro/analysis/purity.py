@@ -1,0 +1,298 @@
+"""Kernel purity lint for ``kernels/*/ref.py`` and ``kernels/*/kernel.py``.
+
+A kernel body must be a pure trace: host synchronization or host-side
+control flow on traced values either crashes under ``jit``/``pallas_call``
+or — worse — silently bakes one traced value into the compiled program.
+This lint rejects, inside ref/kernel modules:
+
+* host syncs: ``jax.device_get`` / ``device_get``, ``.item()``,
+  ``.block_until_ready()``, and ``float(x)`` / ``int(x)`` / ``bool(x)``
+  applied to a traced value;
+* Python branching (``if`` / ``while`` / ternary / comprehension filters)
+  whose test involves a traced value;
+* ``time`` / ``random`` / ``numpy.random`` — kernels must be
+  deterministic functions of their inputs.
+
+Traced-ness is inferred conservatively but in the repo's idiom: parameters
+annotated ``int`` / ``bool`` / ``str`` / ``float`` are static
+configuration; unannotated (or array-annotated) parameters are traced;
+``.shape`` / ``.ndim`` / ``.dtype`` / ``len()`` of anything are static;
+arithmetic/comparisons of statics stay static; any other call result is
+traced.  Branching on statics (tile math, mode strings, unrolled
+``while shift < n`` scans) is the normal metaprogramming idiom and passes.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .report import Finding
+
+CHECK = "kernel-purity"
+
+_STATIC_ANNOTATIONS = {"int", "bool", "str", "float"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize"}
+_STATIC_CALLS = {"len", "range", "min", "max", "abs", "sum", "isinstance",
+                 "tuple", "list", "sorted", "enumerate", "zip", "divmod",
+                 "getattr", "hasattr", "type", "repr", "str",
+                 # host-side dtype/shape predicates (jnp.issubdtype & co)
+                 "issubdtype", "result_type", "finfo", "iinfo", "cdiv"}
+_CAST_CALLS = {"float", "int", "bool"}
+_FORBIDDEN_MODULES = {"time", "random", "numpy.random"}
+
+
+def _annotation_name(node: ast.expr | None) -> str | None:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+class _FunctionChecker:
+    def __init__(self, rel: str, qualname: str,
+                 module_static: set[str]):
+        self.rel = rel
+        self.qualname = qualname
+        self.static: set[str] = set(module_static)
+        self.traced: set[str] = set()
+        self.findings: list[Finding] = []
+
+    # -- static-value inference -------------------------------------------
+
+    def bind_params(self, fn: ast.FunctionDef) -> None:
+        args = list(fn.args.posonlyargs) + list(fn.args.args) \
+            + list(fn.args.kwonlyargs)
+        for a in args:
+            if _annotation_name(a.annotation) in _STATIC_ANNOTATIONS:
+                self.static.add(a.arg)
+            else:
+                self.traced.add(a.arg)
+        if fn.args.vararg:
+            self.traced.add(fn.args.vararg.arg)
+        if fn.args.kwarg:
+            self.traced.add(fn.args.kwarg.arg)
+
+    def is_static(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.Name):
+            if node.id in self.traced:
+                return False
+            # statics, module constants, imported helpers: all host values
+            return True
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return True
+            return self.is_static(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_static(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_static(node.left) and self.is_static(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_static(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return all(self.is_static(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return self.is_static(node.left) and \
+                all(self.is_static(c) for c in node.comparators)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return all(self.is_static(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self.is_static(node.test) and self.is_static(node.body)
+                    and self.is_static(node.orelse))
+        if isinstance(node, ast.Call):
+            fname = None
+            if isinstance(node.func, ast.Name):
+                fname = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                fname = node.func.attr
+            if fname in _STATIC_CALLS or fname in _CAST_CALLS:
+                return all(self.is_static(a) for a in node.args)
+            return False            # jnp/pl/unknown calls produce tracers
+        if isinstance(node, ast.Starred):
+            return self.is_static(node.value)
+        return False
+
+    def assign(self, target: ast.expr, static: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.static if static else self.traced).add(target.id)
+            (self.traced if static else self.static).discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self.assign(el, static)
+
+    # -- the walk ----------------------------------------------------------
+
+    def report(self, line: int, tag: str, msg: str) -> None:
+        self.findings.append(Finding(CHECK, self.rel, line,
+                                     f"{self.qualname}.{tag}", msg))
+
+    def check_test(self, test: ast.expr, construct: str) -> None:
+        if not self.is_static(test):
+            src = ast.unparse(test)
+            self.report(test.lineno, construct,
+                        f"Python {construct} on a traced value "
+                        f"({src!r}) in {self.qualname} — branch decisions "
+                        f"must be static (shapes, modes, tile config)")
+
+    def walk(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self.walk_stmt(stmt)
+
+    def walk_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return                  # nested defs are checked as own scopes
+        if isinstance(stmt, ast.Assign):
+            static = self.is_static(stmt.value)
+            self.visit_expr(stmt.value)
+            for t in stmt.targets:
+                self.assign(t, static)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self.visit_expr(stmt.value)
+            if isinstance(stmt.target, ast.Name):
+                static = stmt.target.id in self.static \
+                    and self.is_static(stmt.value)
+                self.assign(stmt.target, static)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                static = self.is_static(stmt.value)
+                self.visit_expr(stmt.value)
+                self.assign(stmt.target, static)
+            return
+        if isinstance(stmt, ast.If) or isinstance(stmt, ast.While):
+            kind = "if" if isinstance(stmt, ast.If) else "while"
+            self.check_test(stmt.test, kind)
+            self.visit_expr(stmt.test)
+            self.walk(stmt.body)
+            self.walk(stmt.orelse)
+            return
+        if isinstance(stmt, ast.For):
+            self.visit_expr(stmt.iter)
+            self.assign(stmt.target, self.is_static(stmt.iter))
+            self.walk(stmt.body)
+            self.walk(stmt.orelse)
+            return
+        for _f, value in ast.iter_fields(stmt):
+            if isinstance(value, ast.expr):
+                self.visit_expr(value)
+            elif isinstance(value, list):
+                if value and isinstance(value[0], ast.stmt):
+                    self.walk(value)
+                else:
+                    for v in value:
+                        if isinstance(v, ast.expr):
+                            self.visit_expr(v)
+                        elif isinstance(v, ast.excepthandler):
+                            self.walk(v.body)
+
+    def visit_expr(self, expr: ast.expr) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.IfExp):
+                self.check_test(node.test, "ternary")
+            elif isinstance(node, ast.comprehension):
+                for cond in node.ifs:
+                    self.check_test(cond, "comprehension-if")
+            elif isinstance(node, ast.Call):
+                self.check_call(node)
+
+    def check_call(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            if func.attr == "item":
+                self.report(node.lineno, "item",
+                            f".item() in {self.qualname} is a host sync — "
+                            f"it blocks on the device value")
+            elif func.attr == "block_until_ready":
+                self.report(node.lineno, "block_until_ready",
+                            f".block_until_ready() in {self.qualname} is a "
+                            f"host sync")
+            elif func.attr == "device_get":
+                self.report(node.lineno, "device_get",
+                            f"jax.device_get in {self.qualname} pulls the "
+                            f"value to host mid-kernel")
+        elif isinstance(func, ast.Name):
+            if func.id == "device_get":
+                self.report(node.lineno, "device_get",
+                            f"device_get in {self.qualname} pulls the value "
+                            f"to host mid-kernel")
+            elif func.id in _CAST_CALLS and node.args \
+                    and not self.is_static(node.args[0]):
+                src = ast.unparse(node.args[0])
+                self.report(node.lineno, func.id,
+                            f"{func.id}() applied to traced value "
+                            f"({src!r}) in {self.qualname} forces a host "
+                            f"sync (concretization)")
+
+
+def _module_static_names(tree: ast.Module) -> set[str]:
+    """Module-level constant names (DEFAULT_TILE & co) are static."""
+    out = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+    return out
+
+
+def check_module(source: str, rel: str) -> list[Finding]:
+    tree = ast.parse(source)
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in _FORBIDDEN_MODULES:
+                    findings.append(Finding(
+                        CHECK, rel, node.lineno, f"import.{a.name}",
+                        f"import of '{a.name}' in a kernel module — kernel "
+                        f"flavours must be deterministic and clock-free"))
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            root = node.module.split(".")[0]
+            if node.module in _FORBIDDEN_MODULES or root in ("time",
+                                                             "random"):
+                findings.append(Finding(
+                    CHECK, rel, node.lineno, f"import.{node.module}",
+                    f"import from '{node.module}' in a kernel module — "
+                    f"kernel flavours must be deterministic and clock-free"))
+    module_static = _module_static_names(tree)
+
+    seen: set[int] = set()
+
+    def check_fn(fn: ast.FunctionDef, prefix: str) -> None:
+        if id(fn) in seen:
+            return
+        seen.add(id(fn))
+        qual = f"{prefix}{fn.name}"
+        chk = _FunctionChecker(rel, qual, module_static)
+        chk.bind_params(fn)
+        chk.walk(fn.body)
+        findings.extend(chk.findings)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.FunctionDef) and node is not fn:
+                check_fn(node, f"{qual}.")
+
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef):
+            check_fn(node, "")
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, ast.FunctionDef):
+                    check_fn(sub, f"{node.name}.")
+    return findings
+
+
+def run(files: list[tuple[str, str]]) -> list[Finding]:
+    findings = []
+    for path, rel in files:
+        with open(path, encoding="utf-8") as fh:
+            findings.extend(check_module(fh.read(), rel))
+    return findings
+
+
+__all__ = ["run", "check_module", "CHECK"]

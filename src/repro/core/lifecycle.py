@@ -73,12 +73,17 @@ class FreezePolicy:
 @dataclass(frozen=True)
 class StaticTier:
     """An immutable published tier: the compressed image, its docid horizon
-    (every docid <= num_docs is served from it), and the freeze epoch."""
+    (every docid <= num_docs is served from it), the freeze epoch, and the
+    encode wall-clock.  Everything a reader learns about a freeze rides on
+    this ONE object — the manager's ``epoch``/``freezes``/``last_freeze_s``
+    are derived views, so the tier swap is a single reference assignment
+    with no multi-field publication window."""
 
     index: StaticIndex
     num_docs: int
     num_postings: int
     epoch: int
+    encode_s: float | None = None
 
 
 class FreezeCoordinator:
@@ -119,10 +124,11 @@ class FreezeCoordinator:
         self.max_in_flight = max_in_flight
         self.managers: list[FreezeManager] = []
         self._cond = threading.Condition()
-        self._in_flight = 0
-        self._waiters: deque[FreezeManager] = deque()
-        self.peak_in_flight = 0
-        self.deferrals = 0          # refused try_acquires (queue pressure)
+        self._in_flight = 0                             # guarded_by: _cond
+        self._waiters: deque[FreezeManager] = deque()   # guarded_by: _cond
+        self.peak_in_flight = 0                         # guarded_by: _cond
+        # refused try_acquires (queue pressure)
+        self.deferrals = 0                              # guarded_by: _cond
 
     def register(self, manager: "FreezeManager") -> "FreezeManager":
         """Adopt a manager: its background freezes now need an encode slot."""
@@ -132,7 +138,7 @@ class FreezeCoordinator:
 
     # -- slot accounting ---------------------------------------------------
 
-    def _grant(self) -> None:
+    def _grant(self) -> None:       # requires: _cond
         self._in_flight += 1
         self.peak_in_flight = max(self.peak_in_flight, self._in_flight)
 
@@ -219,14 +225,32 @@ class FreezeManager:
     def __init__(self, engine, policy: FreezePolicy | None = None):
         self.engine = engine
         self.policy = policy or FreezePolicy()
-        self.tier: StaticTier | None = None
-        self.epoch = 0
-        self.freezes = 0
-        self.last_freeze_s: float | None = None
-        self._thread: threading.Thread | None = None
+        self.tier: StaticTier | None = None             # published
+        self._thread: threading.Thread | None = None    # writer_only
         self.coordinator: FreezeCoordinator | None = None
 
     # -- observability ----------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        """Freeze epoch of the published tier (0 before the first swap).
+        Derived from the single published ``tier`` reference — one load, so
+        ``epoch``/``freezes``/the horizon can never be observed mutually
+        inconsistent the way separate counter fields could."""
+        tier = self.tier
+        return tier.epoch if tier is not None else 0
+
+    @property
+    def freezes(self) -> int:
+        """Completed freezes == the published epoch (each freeze bumps the
+        epoch by exactly one, starting from zero)."""
+        return self.epoch
+
+    @property
+    def last_freeze_s(self) -> float | None:
+        """Encode wall-clock of the most recent freeze (rides on the tier)."""
+        tier = self.tier
+        return tier.encode_s if tier is not None else None
 
     @property
     def in_flight(self) -> bool:
@@ -241,10 +265,11 @@ class FreezeManager:
     def suffix_size(self) -> tuple[int, int]:
         """(docs, postings) ingested past the current tier horizon."""
         idx = self.engine.index
-        if self.tier is None:
+        tier = self.tier        # snapshot ONCE: a background swap between
+        if tier is None:        # loads would mix two horizons (torn read)
             return idx.num_docs, idx.num_postings
-        return (idx.num_docs - self.tier.num_docs,
-                idx.num_postings - self.tier.num_postings)
+        return (idx.num_docs - tier.num_docs,
+                idx.num_postings - tier.num_postings)
 
     # -- the lifecycle -----------------------------------------------------
 
@@ -306,14 +331,13 @@ class FreezeManager:
                     tier = StaticTier(index=static,
                                       num_docs=snapshot.num_docs,
                                       num_postings=snapshot.num_postings,
-                                      epoch=epoch)
-                    # atomic publish: one reference assignment, immutable
-                    # payload (Engine.stats() re-derives freezes/tier_epoch
-                    # from here)
+                                      epoch=epoch,
+                                      encode_s=time.perf_counter() - t0)
+                    # atomic publish: ONE reference assignment of an
+                    # immutable payload — epoch/freezes/last_freeze_s are
+                    # all derived views of this reference, so there is no
+                    # window where a reader sees them inconsistent
                     self.tier = tier
-                    self.epoch = epoch
-                    self.freezes += 1
-                    self.last_freeze_s = time.perf_counter() - t0
                 finally:
                     if coord is not None:
                         coord.release(self)

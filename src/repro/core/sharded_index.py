@@ -36,6 +36,7 @@ Two layers live here:
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -208,6 +209,18 @@ def sharded_input_specs(mesh, *, shard_blocks: int, B: int = 64,
 # --------------------------------------------------------------------------
 
 
+@dataclass(frozen=True)
+class _FleetCounts:
+    """Fleet-wide ingest counters, published as ONE immutable snapshot so a
+    pool-thread reader (ranked scoring mid-fan-out) always sees a mutually
+    consistent (version, N, total_tokens) triple — three separate counter
+    fields could be observed mid-update between stores."""
+
+    version: int        # bumps per ingested document (cache-key component)
+    num_docs: int
+    total_tokens: int
+
+
 class ShardedEngine:
     """Document-partitioned fan-out of per-shard query engines — a
     first-class Engine: exact, parallel, and freeze-coordinated.
@@ -269,15 +282,14 @@ class ShardedEngine:
                 return Engine(**engine_kwargs)
         self.engines = [engine_factory() for _ in range(num_shards)]
         self.num_shards = len(self.engines)
-        self.version = 0              # bumps per ingested document
-        self._num_docs = 0
-        self._total_tokens = 0
-        self._ft: dict[bytes, int] = {}   # term -> global DOCUMENT frequency
+        self._counts = _FleetCounts(0, 0, 0)            # published
+        # term -> global DOCUMENT frequency
+        self._ft: dict[bytes, int] = {}                 # gil_shared
         # per-shard global-f_t arrays aligned to each shard's term ids
         # (keyed by the identity of the engine's append-only vocab list),
         # value-updated incrementally at ingest and suffix-extended at read
         # time — a device-image refresh never re-walks the vocabulary
-        self._gft_cache: dict[int, "np.ndarray"] = {}
+        self._gft_cache: dict[int, "np.ndarray"] = {}   # gil_shared
         # every shard scores with the fleet's collection-wide statistics
         for e in self.engines:
             e.stats_provider = self.collection_stats
@@ -321,16 +333,21 @@ class ShardedEngine:
         which equals the oracle's ``doclens[1:N+1].mean()`` bit-for-bit
         (integer sums below 2**53 are exact in float64)."""
         from .query import CollectionStats
-        n = self._num_docs
+        c = self._counts
         return CollectionStats(
-            num_docs=n,
-            avg_doclen=self._total_tokens / n if n else 0.0,
+            num_docs=c.num_docs,
+            avg_doclen=c.total_tokens / c.num_docs if c.num_docs else 0.0,
             ft=self._ft,
             fts_cache=self._gft_cache)
 
     @property
+    def version(self) -> int:
+        """Bumps per ingested document (serving cache-key component)."""
+        return self._counts.version
+
+    @property
     def num_docs(self) -> int:
-        return self._num_docs
+        return self._counts.num_docs
 
     @property
     def num_postings(self) -> int:
@@ -352,7 +369,8 @@ class ShardedEngine:
         ingest are serialized by the caller, the same one-writer model as
         ``Engine``/``QueryService``; the fan-out pool is only ever busy
         INSIDE ``execute_many``, never concurrently with an ingest)."""
-        g = self._num_docs + 1
+        c = self._counts
+        g = c.num_docs + 1
         shard = (g - 1) % self.num_shards
         # global stats BEFORE the shard ingest, so the maybe_freeze hooks
         # that fire inside it already see statistics covering this doc
@@ -371,8 +389,8 @@ class ShardedEngine:
                 tid = tid_map.get(tb)
                 if tid is not None and tid < len(arr):
                     arr[tid] = df
-        self._total_tokens += len(terms)
-        self._num_docs = g
+        self._counts = _FleetCounts(c.version + 1, g,
+                                    c.total_tokens + len(terms))
         local = self.engines[shard].add_document(terms)
         assert local == (g - 1) // self.num_shards + 1
         # a global ingest changes every shard's scoring state (N, f_t, avg
@@ -381,7 +399,6 @@ class ShardedEngine:
         for s, e in enumerate(self.engines):
             if s != shard:
                 e.version += 1
-        self.version += 1
         # pump deferred freezes fleet-wide: the fleet shares ONE writer
         # thread (this method), so a shard whose encode-slot request was
         # refused may retry on ANY ingest — not only its own — which keeps
@@ -486,7 +503,7 @@ class ShardedEngine:
             agg.freezes += s.freezes
             for k, v in s.by_backend.items():
                 agg.by_backend[k] = agg.by_backend.get(k, 0) + v
-        agg.num_docs = self._num_docs
+        agg.num_docs = self.num_docs
         agg.vocab_size = len(self._ft)
         agg.tier_epoch = self.coordinator.epoch
         agg.num_shards = self.num_shards

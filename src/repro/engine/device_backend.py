@@ -76,15 +76,15 @@ class ResidentImageManager:
         self.decode_fn = decode_fn
         self._frozen_raw: DeviceIndex | None = None   # as built at freeze
         self._baseline = None                          # DeltaBaseline
-        self._frozen = None                            # stats-rebased frozen
-        self._delta = None                             # DeltaIndex
+        self._frozen = None             # writer_only — stats-rebased frozen
+        self._delta = None              # writer_only — DeltaIndex
         self._doclens = None                           # (cap+1,) f32 device
         self._n_stat = None
         self._avg_stat = None                          # fleet avgdl (sharded)
-        self._synced_version = -1
+        self._synced_version = -1                      # writer_only
         self._frozen_mb = 1                            # max_blocks, frozen
         self._delta_mb = 1                             # max_blocks, delta
-        self._nblk_np = None                           # host (frozen, delta)
+        self._nblk_np = None            # writer_only — host (frozen, delta)
         #                                                per-term chain sizes
         self._doc_cap = 1024
         self._vocab_cap = 64

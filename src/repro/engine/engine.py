@@ -79,7 +79,7 @@ class Engine:
         self.auto_collate_delta_frac = auto_collate_delta_frac
         self.delta_compact_frac = delta_compact_frac
         self.delta_compact_min_blocks = delta_compact_min_blocks
-        self.version = 0                  # bumps per ingested document
+        self.version = 0                  # published — bumps per ingested doc
         # when this engine is one shard of a document-partitioned fleet,
         # the fan-out layer installs a callable returning the fleet-wide
         # CollectionStats — every ranked scorer and device-image refresh

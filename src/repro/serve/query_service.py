@@ -50,11 +50,12 @@ class QueryService:
     def __init__(self, engine, max_batch: int = 32, cache_size: int = 256):
         self.engine = engine
         self.max_batch = max_batch
-        self._pending: list[Ticket] = []
+        self._pending: list[Ticket] = []                # writer_only
         self.query_latencies: list[float] = []
         self.ingest_latencies: list[float] = []
         self.cache_size = cache_size
-        self._cache: OrderedDict[tuple, QueryResult] = OrderedDict()
+        self._cache: OrderedDict[tuple, QueryResult] \
+            = OrderedDict()                             # writer_only
         self.cache_hits = 0
         self.cache_misses = 0
 

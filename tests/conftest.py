@@ -1,8 +1,42 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the single real device; only launch/dryrun.py forces 512 fake devices."""
 
+import os
+
 import numpy as np
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize", action="store_true", default=False,
+        help="run every test under the repro.analysis concurrency "
+             "sanitizer (instrumented locks + race detection); the "
+             "REPRO_SANITIZE=1 env flag is equivalent")
+
+
+@pytest.fixture(autouse=True)
+def sanitizer(request):
+    """Under ``--sanitize`` / ``REPRO_SANITIZE=1``: instrument every lock
+    created by repro/test code for the duration of the test and fail it on
+    any lock-order inversion or detected race.  Otherwise yields None at
+    zero cost.  Tests that *deliberately* seed violations construct their
+    own private :class:`Sanitizer` (never ``enable()``-d), so their
+    findings land in the private instance, not here."""
+    want = request.config.getoption("--sanitize") \
+        or os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+    if not want:
+        yield None
+        return
+    from repro.analysis.sanitizer import Sanitizer
+    san = Sanitizer(name=request.node.name)
+    san.enable()
+    try:
+        yield san
+    finally:
+        san.disable()
+        assert not san.findings, \
+            f"concurrency sanitizer findings:\n{san.report()}"
 
 try:
     # Hypothesis profiles (selected with --hypothesis-profile=NAME):

@@ -462,3 +462,85 @@ def test_freeze_manager_standalone(stream_docs):
     assert tier.num_postings == eng.index.num_postings
     assert tier.index.bytes_per_posting() < eng.index.bytes_per_posting()
     _assert_identical(eng, (vocab[0], vocab[2]), "ranked_tfidf")
+
+
+# --------------------------------------------------------------------------
+# pinning tests for the repro.analysis first-run findings (PR 7): freeze
+# metadata is published atomically, and suffix_size snapshots the tier once
+# --------------------------------------------------------------------------
+
+
+def test_freeze_metadata_published_atomically(stream_docs):
+    """epoch/freezes/last_freeze_s are derived views of the ONE published
+    ``tier`` reference.  Under the old three-field publication
+    (tier, then epoch, then freezes), a concurrent reader could observe
+    ``tier.epoch`` ahead of ``epoch`` ahead of ``freezes``; reading the
+    derived views in (tier, epoch, freezes) order must now always satisfy
+    freezes >= epoch >= tier.epoch (values only move forward in time)."""
+    vocab, docs = stream_docs
+    eng = Engine(B=64, growth="const",
+                 tier_policy=FreezePolicy(every_docs=12, background=True))
+    mgr = eng.lifecycle
+    stop = threading.Event()
+    bad = []
+
+    def reader():
+        while not stop.is_set():
+            tier = mgr.tier                   # earliest snapshot...
+            epoch = mgr.epoch
+            freezes = mgr.freezes             # ...latest snapshot
+            t_ep = tier.epoch if tier is not None else 0
+            if not freezes >= epoch >= t_ep:
+                bad.append((t_ep, epoch, freezes))
+            if tier is not None and tier.encode_s is None:
+                bad.append(("tier published without encode_s", tier.epoch))
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        for d in docs[:200]:
+            eng.add_document(d)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    mgr.wait()
+    assert not bad, f"inconsistent freeze metadata observed: {bad[:5]}"
+    # the derived-view invariant, settled: one freeze == one epoch
+    assert mgr.freezes == mgr.epoch == mgr.tier.epoch > 0
+    assert mgr.last_freeze_s == mgr.tier.encode_s is not None
+
+
+def test_suffix_size_snapshots_tier_once():
+    """A background swap completing MID-read of suffix_size must not mix
+    two horizons.  The fake index publishes a new tier from inside its
+    ``num_postings`` property — exactly between the old code's second and
+    third loads of ``self.tier`` — which used to yield (50 docs, 0
+    postings): a torn read spanning both horizons."""
+    from repro.core.lifecycle import StaticTier
+
+    class SwappingIndex:
+        mgr = None
+
+        @property
+        def num_docs(self):
+            return 100
+
+        @property
+        def num_postings(self):
+            # a freeze thread swaps the tier mid-read
+            self.mgr.tier = StaticTier(index=None, num_docs=100,
+                                       num_postings=1000, epoch=2)
+            return 1000
+
+    class FakeEngine:
+        def __init__(self, idx):
+            self.index = idx
+
+    idx = SwappingIndex()
+    mgr = FreezeManager(FakeEngine(idx), FreezePolicy())
+    idx.mgr = mgr
+    mgr.tier = StaticTier(index=None, num_docs=50, num_postings=500, epoch=1)
+    assert mgr.suffix_size() == (50, 500)   # ONE horizon, the snapshot's
+    assert mgr.suffix_size() == (0, 0)      # next call sees the new tier

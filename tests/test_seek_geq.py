@@ -5,6 +5,7 @@ policies, word-level mode, and adversarial gap patterns."""
 import numpy as np
 import pytest
 
+from repro.analysis.contracts import wrap
 from repro.core import query as Q
 from repro.core.index import DynamicIndex
 from repro.core.query import PostingsCursor
@@ -14,9 +15,11 @@ GROWTHS = ["const", "triangle", "expon"]
 
 def _sweep_cursor(idx, term, targets):
     """Drive one cursor through non-decreasing ``targets`` and check every
-    landing position against the decoded postings list."""
+    landing position against the decoded postings list.  The contract
+    wrapper asserts the protocol postconditions (monotone docid, seek_geq
+    lands >= target or exhausts) on every call, independent of the oracle."""
     docids, _ = idx.postings(term)
-    cur = PostingsCursor(idx.store, idx.lookup(term))
+    cur = wrap(PostingsCursor(idx.store, idx.lookup(term)), label=term)
     floor = 0  # cursors only move forward
     for t in targets:
         ok = cur.seek_geq(t)
@@ -104,7 +107,7 @@ def test_seek_geq_word_level_adversarial():
         else:
             idx.add_document(["pad"])
     docids, _ = idx.postings("echo")
-    cur = PostingsCursor(idx.store, idx.lookup("echo"))
+    cur = wrap(PostingsCursor(idx.store, idx.lookup("echo")), label="echo")
     assert cur.seek_geq(120)
     assert cur.docid == 150
     # advancing within the 5 duplicate postings stays on the same document

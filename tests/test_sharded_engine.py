@@ -4,7 +4,6 @@ maps, parallel fan-out, coordinated freeze scheduling, and serving-cache
 integration (ISSUE 5)."""
 
 import threading
-import time
 
 import numpy as np
 import pytest
@@ -236,13 +235,17 @@ def test_coordinator_caps_concurrent_encodes(stream_docs, max_in_flight,
     active = [0]
     peak = [0]
     real_freeze = static_index_mod.StaticIndex.freeze
+    # handshake instead of a timing window: encodes HOLD their slot until
+    # the ingest loop has observed the contention it asserts on, then the
+    # gate opens for all later freezes (timeout only as a deadlock bound)
+    gate = threading.Event()
 
     def slow_freeze(index, codec="bp128"):
         with lock:
             active[0] += 1
             peak[0] = max(peak[0], active[0])
         try:
-            time.sleep(0.01)       # widen the overlap window
+            gate.wait(timeout=30)
             return real_freeze(index, codec)
         finally:
             with lock:
@@ -260,11 +263,16 @@ def test_coordinator_caps_concurrent_encodes(stream_docs, max_in_flight,
         se.add_document(d)
         oracle.add_document(d)
         saw_in_flight |= any(e.lifecycle.in_flight for e in se.engines)
+        if not gate.is_set() and (
+                peak[0] >= max_in_flight
+                if max_in_flight > 1 else se.coordinator.deferrals > 0):
+            gate.set()          # contention observed: release the encodes
         if i % 6 == 2:
             terms = tuple(vocab[j] for j in
                           rng.choice(40, size=2, replace=False))
             _assert_byte_identical(se, oracle, terms, "bm25")
             _assert_byte_identical(se, oracle, terms, "conjunctive")
+    gate.set()                  # unblock any straggling encode
     se.drain_freezes()
     assert saw_in_flight, "no background freeze ever overlapped the stream"
     assert peak[0] <= max_in_flight, \
@@ -289,11 +297,13 @@ def test_deferred_freeze_pumped_by_any_shard_ingest(stream_docs,
                        max_in_flight=1)
     for d in docs[:41]:
         se.add_document(d)
-    # shard 1's encode holds the slot for a while
+    # shard 1's encode holds the slot until WE release it — the refusal
+    # below is deterministic, not a race against a timed window
     real_freeze = static_index_mod.StaticIndex.freeze
+    hold = threading.Event()
 
     def slow_freeze(index, codec="bp128"):
-        time.sleep(0.15)
+        hold.wait(timeout=30)
         return real_freeze(index, codec)
 
     monkeypatch.setattr(static_index_mod.StaticIndex, "freeze", slow_freeze)
@@ -304,6 +314,7 @@ def test_deferred_freeze_pumped_by_any_shard_ingest(stream_docs,
                                                      background=True))
     assert not mgr0.maybe_freeze()            # slot busy -> deferred
     assert se.coordinator.pending == 1
+    hold.set()                                # let the encode finish
     se.engines[1].lifecycle.wait()            # slot frees
     # the next ingest routes to shard 1 (num_docs=41 is odd -> global 42
     # lands on shard (42-1) % 2 = 1), NOT to queued shard 0 — only the
