@@ -28,6 +28,12 @@ CONCURRENT_MODULES = [
     "src/repro/core/sharded_index.py",
 ]
 
+# Workload-schedule generators: must be pure functions of their seed (the
+# traffic harness's determinism contract) — import-surface lint only.
+SCHEDULE_MODULES = [
+    "src/repro/serve/workload.py",
+]
+
 DEFAULT_ALLOWLIST = "analysis_allowlist.txt"
 
 
@@ -69,6 +75,12 @@ def collect_findings(root: str) -> list[Finding]:
                 root, os.path.join("src", "repro", "kernels"))
             if os.path.basename(p) in ("ref.py", "kernel.py")]
         findings.extend(purity.run(flavor_files))
+
+    for rel in SCHEDULE_MODULES:
+        path = os.path.join(root, rel)
+        if os.path.exists(path):
+            with open(path, encoding="utf-8") as fh:
+                findings.extend(purity.check_schedule_module(fh.read(), rel))
 
     return sorted(findings, key=lambda f: (f.path, f.line, f.symbol))
 

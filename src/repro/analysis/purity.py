@@ -29,6 +29,7 @@ import ast
 from .report import Finding
 
 CHECK = "kernel-purity"
+SCHEDULE_CHECK = "schedule-purity"
 
 _STATIC_ANNOTATIONS = {"int", "bool", "str", "float"}
 _STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize"}
@@ -241,25 +242,52 @@ def _module_static_names(tree: ast.Module) -> set[str]:
     return out
 
 
-def check_module(source: str, rel: str) -> list[Finding]:
-    tree = ast.parse(source)
+def _scan_imports(tree: ast.Module, rel: str, *, check: str,
+                  forbidden: set[str], roots: set[str],
+                  context: str) -> list[Finding]:
+    """Flag imports of nondeterminism sources (clock / ambient RNG)."""
     findings: list[Finding] = []
     for node in ast.walk(tree):
         if isinstance(node, ast.Import):
             for a in node.names:
-                if a.name in _FORBIDDEN_MODULES:
+                if a.name in forbidden or a.name.split(".")[0] in roots:
                     findings.append(Finding(
-                        CHECK, rel, node.lineno, f"import.{a.name}",
-                        f"import of '{a.name}' in a kernel module — kernel "
-                        f"flavours must be deterministic and clock-free"))
+                        check, rel, node.lineno, f"import.{a.name}",
+                        f"import of '{a.name}' in a {context}"))
         elif isinstance(node, ast.ImportFrom) and node.module:
             root = node.module.split(".")[0]
-            if node.module in _FORBIDDEN_MODULES or root in ("time",
-                                                             "random"):
+            if node.module in forbidden or root in roots:
                 findings.append(Finding(
-                    CHECK, rel, node.lineno, f"import.{node.module}",
-                    f"import from '{node.module}' in a kernel module — "
-                    f"kernel flavours must be deterministic and clock-free"))
+                    check, rel, node.lineno, f"import.{node.module}",
+                    f"import from '{node.module}' in a {context}"))
+    return findings
+
+
+def check_schedule_module(source: str, rel: str) -> list[Finding]:
+    """Determinism lint for workload-schedule generators (serve/workload):
+    the schedule must be a pure function of its seed, so the module may not
+    import any clock or ambient-RNG source (``time`` / ``random`` /
+    ``datetime`` / ``numpy.random`` — seeded ``np.random.default_rng`` via
+    the ``numpy`` namespace is the sanctioned idiom).  Import-surface only:
+    the kernel lint's per-function traced-value inference would
+    false-positive all over ordinary host code, and banning the imports is
+    what actually guards against `time`-based nondeterminism."""
+    tree = ast.parse(source)
+    return _scan_imports(
+        tree, rel, check=SCHEDULE_CHECK,
+        forbidden=set(_FORBIDDEN_MODULES) | {"datetime"},
+        roots={"time", "random", "datetime"},
+        context="schedule-generator module — workload schedules must be "
+                "pure functions of their seed (no clock, no ambient RNG)")
+
+
+def check_module(source: str, rel: str) -> list[Finding]:
+    tree = ast.parse(source)
+    findings = _scan_imports(
+        tree, rel, check=CHECK, forbidden=set(_FORBIDDEN_MODULES),
+        roots={"time", "random"},
+        context="kernel module — kernel flavours must be deterministic "
+                "and clock-free")
     module_static = _module_static_names(tree)
 
     seen: set[int] = set()
@@ -295,4 +323,5 @@ def run(files: list[tuple[str, str]]) -> list[Finding]:
     return findings
 
 
-__all__ = ["run", "check_module", "CHECK"]
+__all__ = ["run", "check_module", "check_schedule_module", "CHECK",
+           "SCHEDULE_CHECK"]

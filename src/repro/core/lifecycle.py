@@ -262,6 +262,16 @@ class FreezeManager:
             self._thread.join()
             self._thread = None
 
+    def quiesce(self) -> None:
+        """Snapshot barrier (``core/persist.py``): join any in-flight
+        background encode so a subsequent ``Engine.snapshot`` captures the
+        newest tier.  Optional — a snapshot is consistent WITHOUT it (the
+        persist path reads the published ``tier`` reference exactly once,
+        and the tiered merge is exact at any horizon); quiescing only moves
+        the persisted horizon forward.  Writer thread only, like every
+        freeze entry point."""
+        self.wait()
+
     def suffix_size(self) -> tuple[int, int]:
         """(docs, postings) ingested past the current tier horizon."""
         idx = self.engine.index

@@ -481,6 +481,35 @@ class ShardedEngine:
         return out
 
     # ------------------------------------------------------------------
+    # persistence (core/persist.py)
+    # ------------------------------------------------------------------
+
+    def snapshot(self, root: str, *, keep: int = 3,
+                 quiesce: bool = False) -> str:
+        """Persist the whole fleet under ``root`` — per-shard engine state
+        plus the fleet counters and global term statistics, all published
+        by ONE atomic rename (shards can never restore torn against each
+        other).  Writer thread only.  ``quiesce=True`` joins in-flight
+        shard encodes first so every shard's newest tier is captured."""
+        from . import persist
+        if quiesce:
+            for e in self.engines:
+                if getattr(e, "lifecycle", None) is not None:
+                    e.lifecycle.quiesce()
+        return persist.save_sharded(self, root, keep=keep)
+
+    @classmethod
+    def restore(cls, path_or_root: str, *, parallel: bool = True,
+                max_in_flight: int | None = None,
+                **engine_kwargs) -> "ShardedEngine":
+        """Rebuild a fleet from a snapshot dir (or the newest under a
+        root); per-shard ``engine_kwargs`` forward runtime knobs."""
+        from . import persist
+        return persist.restore_sharded(path_or_root, parallel=parallel,
+                                       max_in_flight=max_in_flight,
+                                       **engine_kwargs)
+
+    # ------------------------------------------------------------------
     # observability
     # ------------------------------------------------------------------
 
@@ -496,6 +525,8 @@ class ShardedEngine:
             agg.num_postings += s.num_postings
             agg.num_words += s.num_words
             agg.queries += s.queries
+            agg.query_batches += s.query_batches
+            agg.query_time_s += s.query_time_s
             agg.collations += s.collations
             agg.delta_refreshes += s.delta_refreshes
             agg.delta_compactions += s.delta_compactions

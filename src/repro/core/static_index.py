@@ -449,6 +449,79 @@ class StaticIndex:
             return StaticWordCursor(self, ti)
         return StaticPostingsCursor(self, ti)
 
+    # -- persistence (core/persist.py) -----------------------------------
+
+    def to_arrays(self) -> tuple[dict, dict]:
+        """Decompose the image into (meta, flat numpy arrays) for
+        persistence: the compressed word streams and per-list scalars are
+        concatenated with exclusive-prefix offsets, the term bytes into one
+        blob.  Only STORED state is included — the lazily-derived caches
+        (``d_bits``/``w_bits``/``occ_before``/``blk_cache``) are rebuilt on
+        first cursor use, so ``from_arrays`` inverts this exactly and a
+        restored tier serves byte-identical results."""
+        order = sorted(self.terms.items(), key=lambda kv: kv[1])
+        term_bytes = [tb for tb, _ in order]
+        meta = {"codec": self.codec, "word_level": self.word_level,
+                "num_docs": self.num_docs, "num_postings": self.num_postings,
+                "epoch": self.epoch, "num_lists": len(self.lists)}
+
+        def offsets(lengths):
+            out = np.zeros(len(lengths) + 1, np.int64)
+            np.cumsum(np.asarray(lengths, np.int64), out=out[1:])
+            return out
+
+        def concat(parts, dtype):
+            parts = [np.asarray(p, dtype) for p in parts]
+            return (np.concatenate(parts) if parts
+                    else np.zeros(0, dtype))
+
+        d_lasts = [r.d_last if r.d_last is not None
+                   else np.zeros(0, np.int64) for r in self.lists]
+        arrays = {
+            "term_blob": np.frombuffer(b"".join(term_bytes), np.uint8).copy(),
+            "term_off": offsets([len(t) for t in term_bytes]),
+            "n": np.asarray([r.n for r in self.lists], np.int64),
+            "last_d": np.asarray([r.last_d for r in self.lists], np.int64),
+            "sum_f": np.asarray([r.sum_f for r in self.lists], np.int64),
+            "sum_w": np.asarray([r.sum_w for r in self.lists], np.int64),
+            "words": concat([r.words for r in self.lists], np.uint32),
+            "words_off": offsets([len(r.words) for r in self.lists]),
+            "dlast": concat(d_lasts, np.int64),
+            "dlast_off": offsets([len(d) for d in d_lasts]),
+        }
+        return meta, arrays
+
+    @classmethod
+    def from_arrays(cls, meta: dict, arrays: dict) -> "StaticIndex":
+        """Inverse of :meth:`to_arrays`.  ``d_last`` presence follows the
+        codec invariant: interp lists store no skip table (None) while
+        empty lists always carry a zero-length one (``_empty_list``)."""
+        out = cls(meta["codec"], word_level=meta["word_level"])
+        out.num_docs = int(meta["num_docs"])
+        out.num_postings = int(meta["num_postings"])
+        out.epoch = int(meta["epoch"])
+        blob = arrays["term_blob"].tobytes()
+        toff, woff, doff = (arrays["term_off"], arrays["words_off"],
+                            arrays["dlast_off"])
+        for i in range(int(meta["num_lists"])):
+            n = int(arrays["n"][i])
+            if n == 0:
+                d_last = np.zeros(0, np.int64)
+            elif out.codec == "interp":
+                d_last = None
+            else:
+                d_last = arrays["dlast"][doff[i]:doff[i + 1]].copy()
+            rec = TermList(
+                n=n,
+                words=arrays["words"][woff[i]:woff[i + 1]].copy(),
+                last_d=int(arrays["last_d"][i]),
+                sum_f=int(arrays["sum_f"][i]),
+                d_last=d_last,
+                sum_w=int(arrays["sum_w"][i]))
+            out.terms[blob[int(toff[i]):int(toff[i + 1])]] = len(out.lists)
+            out.lists.append(rec)
+        return out
+
     # -- accounting (Table 9: "including vocabulary and other files") ----
 
     def total_bytes(self) -> int:

@@ -9,6 +9,8 @@ scaling PRs (async ingest, caching, multi-backend fusion) plug in here.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from ..core.collate import collate
@@ -235,6 +237,7 @@ class Engine:
         """Plan and run a batch; results align with ``queries``."""
         if not queries:
             return []
+        t0 = time.perf_counter()
         self._maybe_auto_collate()
         plans = []
         for q in queries:
@@ -262,10 +265,39 @@ class Engine:
                 r.reason = plans[i].reason
                 out[i] = r
         self.stats_counters.queries += len(queries)
+        self.stats_counters.query_batches += 1
+        self.stats_counters.query_time_s += time.perf_counter() - t0
         for p in plans:
             bb = self.stats_counters.by_backend
             bb[p.backend] = bb.get(p.backend, 0) + 1
         return out  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    # persistence (core/persist.py)
+    # ------------------------------------------------------------------
+
+    def snapshot(self, root: str, *, keep: int = 3,
+                 quiesce: bool = False) -> str:
+        """Persist this engine under ``root`` (crash-atomic: staged write,
+        manifest last, one rename — see ``core.persist``).  Returns the
+        published snapshot dir.  Runs on the writer thread; safe while a
+        background freeze is encoding (the snapshot captures the currently
+        PUBLISHED tier plus the full dynamic image, which restores
+        byte-identically at any horizon).  ``quiesce=True`` first joins an
+        in-flight encode so the newest tier lands in the snapshot."""
+        from ..core import persist
+        if quiesce and self.lifecycle is not None:
+            self.lifecycle.quiesce()
+        return persist.save_engine(self, root, keep=keep)
+
+    @classmethod
+    def restore(cls, path_or_root: str, **engine_kwargs) -> "Engine":
+        """Rebuild an engine from a snapshot dir (or the newest snapshot
+        under a root).  ``engine_kwargs`` forwards runtime knobs (planner,
+        force_backend, decode_fn, ...); index shape and freeze policy come
+        from the manifest."""
+        from ..core import persist
+        return persist.restore_engine(path_or_root, **engine_kwargs)
 
     # ------------------------------------------------------------------
     # observability

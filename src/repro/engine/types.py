@@ -90,6 +90,8 @@ class EngineStats:
     num_words: int = 0        # total tokens ingested (= postings, word-level)
     vocab_size: int = 0
     queries: int = 0
+    query_batches: int = 0    # execute_many calls (latency denominator)
+    query_time_s: float = 0.0  # wall-clock inside execute_many (plan+run)
     collations: int = 0
     delta_refreshes: int = 0
     delta_compactions: int = 0  # refreshes that hit the fragmentation

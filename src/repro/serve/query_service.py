@@ -89,6 +89,21 @@ class QueryService:
                            None if r.scores is None else r.scores.copy(),
                            r.backend, r.reason)
 
+    @property
+    def hit_rate(self) -> float:
+        """Result-cache hit rate over every CACHEABLE lookup so far (hits /
+        (hits + misses)); 0.0 before any lookup.  Uncacheable submissions
+        (caching disabled, or an engine without a version counter) count as
+        neither hit nor miss — they never consulted the cache."""
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def cache_stats(self) -> dict:
+        """Counters for dashboards and the traffic bench: cumulative hits /
+        misses, the derived hit rate, and current entry count."""
+        return {"hits": self.cache_hits, "misses": self.cache_misses,
+                "hit_rate": self.hit_rate, "entries": len(self._cache)}
+
     # -- ingest ---------------------------------------------------------
 
     def ingest(self, terms) -> int:

@@ -1,0 +1,252 @@
+"""Traffic harness: seeded determinism, SLO evaluation, availability under
+freeze storms, and the QueryService cache hit/miss accounting the harness
+reports.  Everything here is smoke-scale (CI runs this module via the
+``traffic`` marker) — the full-scale percentiles live in
+benchmarks/traffic_bench.py."""
+
+import numpy as np
+import pytest
+
+from repro.analysis import purity
+from repro.core.lifecycle import FreezePolicy
+from repro.core.sharded_index import ShardedEngine
+from repro.engine import Engine, Query
+from repro.serve import (FakeClock, QueryService, SLOSpec, TrafficReport,
+                         WorkloadSpec, build_query_pool, generate_schedule,
+                         run_traffic)
+
+pytestmark = pytest.mark.traffic
+
+VOCAB = [f"v{i}" for i in range(200)]
+
+
+def make_docs(n, seed=11):
+    rng = np.random.default_rng(seed)
+    probs = 1.0 / np.arange(1, len(VOCAB) + 1) ** 1.1
+    probs /= probs.sum()
+    return [[VOCAB[i] for i in
+             rng.choice(len(VOCAB), size=rng.integers(4, 25), p=probs)]
+            for _ in range(n)]
+
+
+SPEC = WorkloadSpec(seed=42, num_events=150, ingest_fraction=0.25,
+                    num_distinct_queries=24, max_terms=3)
+
+#: Mirrors the bench's generous-margin philosophy: order-of-magnitude
+#: bounds a shared CI box cannot trip, plus the HARD zero-gap invariant.
+SMOKE_SLO = SLOSpec(p50_ms=2000.0, p99_ms=30000.0, p999_ms=60000.0,
+                    max_availability_gap=0)
+
+
+# --------------------------------------------------------------------------
+# seeded determinism
+# --------------------------------------------------------------------------
+
+
+def test_same_seed_identical_schedule():
+    a = generate_schedule(SPEC, VOCAB)
+    b = generate_schedule(SPEC, VOCAB)
+    assert a == b                       # Event/Query are frozen dataclasses
+    assert len(a) == SPEC.num_events
+
+
+def test_different_seed_distinct_schedule():
+    a = generate_schedule(SPEC, VOCAB)
+    b = generate_schedule(WorkloadSpec(seed=43, num_events=150,
+                                       ingest_fraction=0.25,
+                                       num_distinct_queries=24,
+                                       max_terms=3), VOCAB)
+    assert a != b
+
+
+def test_schedule_shape():
+    sched = generate_schedule(SPEC, VOCAB)
+    ts = [e.at_s for e in sched]
+    assert ts == sorted(ts) and ts[0] > 0.0
+    kinds = {e.kind for e in sched}
+    assert kinds <= {"query", "ingest"}
+    for e in sched:
+        assert (e.query is None) == (e.kind == "ingest")
+    # ingest fraction lands near spec (binomial, generous tolerance)
+    frac = sum(e.kind == "ingest" for e in sched) / len(sched)
+    assert 0.10 < frac < 0.45
+
+
+def test_query_pool_modes_and_positional_arity():
+    rng = np.random.default_rng(0)
+    spec = WorkloadSpec(seed=0, num_distinct_queries=30,
+                        modes=("conjunctive", "phrase", "proximity",
+                               "bm25_prox"))
+    pool = build_query_pool(spec, VOCAB, rng)
+    assert len(pool) == 30
+    assert {q.mode for q in pool} == set(spec.modes)
+    for q in pool:
+        if q.mode in ("phrase", "proximity"):
+            assert len(q.terms) >= 2     # 1-term positional is degenerate
+        assert q.window is None or q.mode == "proximity"
+
+
+def test_same_seed_identical_report():
+    """Same seed + FakeClock -> the ENTIRE percentile report is
+    bit-reproducible; nothing in the driver leaks wall-clock."""
+    docs = make_docs(80)
+
+    def once():
+        eng = Engine(force_backend="host",
+                     tier_policy=FreezePolicy(every_docs=30,
+                                              background=False))
+        rep = run_traffic(eng, generate_schedule(SPEC, VOCAB), docs,
+                          clock=FakeClock())
+        return rep.to_dict()
+
+    a, b = once(), once()
+    assert a == b
+    assert a["availability_gap"] == 0 and a["num_events"] == 150
+
+
+def test_fake_clock_is_deterministic():
+    a, b = FakeClock(), FakeClock()
+    assert [a() for _ in range(5)] == [b() for _ in range(5)]
+
+
+def test_schedule_purity_lint():
+    """The analysis pass rejects time-based nondeterminism in schedule
+    generators — and passes the real generator module."""
+    bad = "import time\nfrom random import random\nimport numpy as np\n"
+    findings = purity.check_schedule_module(bad, "serve/workload.py")
+    assert len(findings) == 2
+    assert all(f.check == purity.SCHEDULE_CHECK for f in findings)
+    import repro.serve.workload as wl
+    clean = purity.check_schedule_module(open(wl.__file__).read(),
+                                         "serve/workload.py")
+    assert clean == []
+
+
+# --------------------------------------------------------------------------
+# SLO evaluation
+# --------------------------------------------------------------------------
+
+
+def test_slo_evaluate_bounds_and_violations():
+    rep = TrafficReport(p50_ms=5.0, p99_ms=50.0, p999_ms=100.0,
+                        cache_hit_rate=0.5, availability_gap=2)
+    ok = SLOSpec(p50_ms=10.0, p99_ms=60.0, p999_ms=200.0,
+                 min_cache_hit_rate=0.4, max_availability_gap=2)
+    assert ok.evaluate(rep) == {"ok": True, "violations": []}
+    strict = SLOSpec(p50_ms=1.0, p999_ms=99.0, min_cache_hit_rate=0.9,
+                     max_availability_gap=0)
+    ev = strict.evaluate(rep)
+    assert not ev["ok"] and len(ev["violations"]) == 4
+    # None disables every bound
+    assert SLOSpec(max_availability_gap=None).evaluate(rep)["ok"]
+
+
+def test_traffic_under_freeze_storm_zero_gap():
+    """The acceptance invariant at smoke scale: an aggressive background
+    freeze storm lands mid-stream and not one query fails or goes
+    unanswered."""
+    docs = make_docs(120)
+    eng = Engine(tier_policy=FreezePolicy(every_docs=15, background=True),
+                 force_backend="host")
+    rep = run_traffic(eng, generate_schedule(SPEC, VOCAB), docs)
+    eng.lifecycle.wait()
+    assert rep.availability_gap == 0
+    assert rep.num_queries + rep.num_ingests == rep.num_events
+    assert eng.lifecycle.freezes >= 1
+    ev = SMOKE_SLO.evaluate(rep)
+    assert ev["ok"], ev["violations"]
+
+
+def test_traffic_sharded_zero_gap():
+    docs = make_docs(120)
+    fleet = ShardedEngine(num_shards=2, force_backend="host",
+                          tier_policy=FreezePolicy(every_docs=15,
+                                                   background=True))
+    try:
+        rep = run_traffic(fleet, generate_schedule(SPEC, VOCAB), docs)
+        assert rep.availability_gap == 0
+        assert SMOKE_SLO.evaluate(rep)["ok"]
+    finally:
+        fleet.close()
+
+
+# --------------------------------------------------------------------------
+# cache hit/miss accounting (regression-pins the counters the report uses)
+# --------------------------------------------------------------------------
+
+Q0 = Query(terms=("v0", "v1"), mode="bm25", k=5)
+
+
+def test_cache_counters_hit_then_invalidate_on_ingest():
+    eng = Engine(force_backend="host")
+    for d in make_docs(30):
+        eng.add_document(d)
+    svc = QueryService(eng, max_batch=4, cache_size=32)
+    svc.submit(Q0); svc.flush()
+    assert svc.cache_stats() == {"hits": 0, "misses": 1, "hit_rate": 0.0,
+                                 "entries": 1}
+    svc.submit(Q0); svc.flush()
+    assert (svc.cache_hits, svc.cache_misses) == (1, 1)
+    assert svc.hit_rate == 0.5
+    # ingest bumps engine.version -> the same query misses (immediate
+    # access: the cached result would hide the new document)
+    svc.ingest(["v0", "v1", "v7"])
+    svc.submit(Q0); svc.flush()
+    assert (svc.cache_hits, svc.cache_misses) == (1, 2)
+    svc.submit(Q0); svc.flush()
+    assert (svc.cache_hits, svc.cache_misses) == (2, 2)
+    assert svc.hit_rate == 0.5
+
+
+def test_cache_counters_across_epoch_bumps():
+    """A tier swap (epoch bump) invalidates even with NO ingest in
+    between: the cache key is (version, epoch, query)."""
+    eng = Engine(force_backend="host",
+                 tier_policy=FreezePolicy(every_docs=1000,
+                                          background=False))
+    for d in make_docs(40):
+        eng.add_document(d)
+    svc = QueryService(eng, max_batch=4, cache_size=32)
+    svc.submit(Q0); svc.flush()
+    svc.submit(Q0); svc.flush()
+    assert (svc.cache_hits, svc.cache_misses) == (1, 1)
+    epoch0 = eng.lifecycle.epoch
+    eng.lifecycle.freeze(blocking=True)
+    assert eng.lifecycle.epoch == epoch0 + 1
+    svc.submit(Q0); svc.flush()
+    assert (svc.cache_hits, svc.cache_misses) == (1, 2)
+    svc.submit(Q0); svc.flush()
+    assert (svc.cache_hits, svc.cache_misses) == (2, 2)
+
+
+def test_cache_counters_sharded_tier_swap():
+    """Composite fleet epoch: ANY shard freezing invalidates; hit-rate
+    accounting keeps working across the swap."""
+    fleet = ShardedEngine(num_shards=2, force_backend="host",
+                          tier_policy=FreezePolicy(every_docs=1000,
+                                                   background=False))
+    try:
+        for d in make_docs(40):
+            fleet.add_document(d)
+        svc = QueryService(fleet, max_batch=4, cache_size=32)
+        svc.submit(Q0); svc.flush()
+        svc.submit(Q0); svc.flush()
+        assert (svc.cache_hits, svc.cache_misses) == (1, 1)
+        fleet.engines[0].lifecycle.freeze(blocking=True)  # one shard only
+        svc.submit(Q0); svc.flush()
+        assert (svc.cache_hits, svc.cache_misses) == (1, 2)
+        svc.submit(Q0); svc.flush()
+        assert (svc.cache_hits, svc.cache_misses) == (2, 2)
+        assert svc.cache_stats()["hit_rate"] == 0.5
+    finally:
+        fleet.close()
+
+
+def test_uncacheable_counts_as_neither():
+    eng = Engine(force_backend="host")
+    for d in make_docs(10):
+        eng.add_document(d)
+    svc = QueryService(eng, max_batch=4, cache_size=0)   # caching off
+    svc.submit(Q0); svc.flush()
+    assert svc.cache_stats() == {"hits": 0, "misses": 0, "hit_rate": 0.0,
+                                 "entries": 0}
