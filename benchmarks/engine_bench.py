@@ -55,6 +55,14 @@ policy run with ``max_in_flight=1`` (coordinated) and ``max_in_flight=4``
 observed inside ``StaticIndex.freeze`` and the availability gap (queries
 during the freeze storm that failed or disagreed with a single-engine
 oracle — must be zero).
+
+plus the **deletes** curve (ISSUE 9): a fresh engine over the full corpus
+is frozen, then cumulatively tombstoned to 0/10/25/50% deleted; at each
+point host/tiered/pallas latency is measured before and after the next
+(compacting) freeze, alongside the static tier's total bytes and its
+``tombstones_compacted`` counter — deletion-aware serving must stay flat
+with tombstone density, and freeze-time compaction must reclaim the dead
+postings' bytes.
 """
 
 from __future__ import annotations
@@ -422,6 +430,57 @@ def main() -> None:
           f"peak {simultaneous['peak_concurrent_encodes']} "
           f"(gap {simultaneous['availability_gap_queries']})")
 
+    # ---- deletion curve: latency + static-tier bytes vs % deleted ----
+    # (ISSUE 9) tombstones mask at serve time; the NEXT freeze drops dead
+    # docids from the static tier (freeze-time compaction).  Measured at
+    # cumulative 0/10/25/50% deleted, before and after the compacting
+    # freeze: serving latency must not degrade with tombstone density, and
+    # static bytes should shrink roughly in proportion to the dead fraction
+    # (``tombstones_compacted`` counts the docids the freeze dropped).
+    del_eng = Engine(B=64, growth="const", tier_policy=FreezePolicy())
+    for d in docs:
+        del_eng.add_document(d)
+    del_eng.lifecycle.freeze(blocking=True)
+    n_live = del_eng.index.num_docs
+    perm = np.random.default_rng(23).permutation(np.arange(1, n_live + 1))
+    del_qs = {mode: make_batch(mode, nterms)
+              for mode, nterms in (("conjunctive", 2), ("bm25", 3))}
+    deletes_curve = []
+    dropped = 0
+    for frac in (0.0, 0.10, 0.25, 0.50):
+        target = int(n_live * frac)
+        for docid in perm[dropped:target]:
+            del_eng.delete_document(int(docid))
+        dropped = target
+        row = {"deleted_frac": frac, "deleted_docs": dropped,
+               "live_docs": n_live - dropped}
+        tier_b = del_eng.static_tier()
+        row["static_total_bytes_before_compaction"] = \
+            tier_b.index.total_bytes()
+        for phase in ("before", "after"):
+            for mode, qs in del_qs.items():
+                for backend in ("host", "tiered", "pallas"):
+                    forced = [Query(terms=q.terms, mode=q.mode, k=q.k,
+                                    backend=backend) for q in qs]
+                    _, secs = _timed(lambda: del_eng.execute_many(forced))
+                    row[f"{mode}_{backend}_us_per_query_{phase}"] = \
+                        1e6 * secs / args.queries
+            if phase == "before":
+                del_eng.lifecycle.freeze(blocking=True)  # compaction point
+        tier_a = del_eng.static_tier()
+        row["static_total_bytes_after_compaction"] = tier_a.index.total_bytes()
+        row["static_bytes_per_posting_after"] = \
+            tier_a.index.bytes_per_posting()
+        row["static_postings_after"] = tier_a.num_postings
+        row["tombstones_compacted"] = tier_a.compacted
+        deletes_curve.append(row)
+        print(f"deletes @ {frac:4.0%}: bm25 host "
+              f"{row['bm25_host_us_per_query_before']:8.1f} -> "
+              f"{row['bm25_host_us_per_query_after']:8.1f} us/q, static "
+              f"{row['static_total_bytes_before_compaction']} -> "
+              f"{row['static_total_bytes_after_compaction']} B "
+              f"({row['tombstones_compacted']} docids compacted)")
+
     payload = {
         "config": {"docs": eng.index.num_docs,
                    "postings": eng.index.num_postings,
@@ -476,6 +535,11 @@ def main() -> None:
             "fanout_bm25": fanout,
             "freeze_staggered": staggered,
             "freeze_simultaneous": simultaneous,
+        },
+        "deletes": {
+            "docs": n_live,
+            "delete_order_seed": 23,
+            "curve": deletes_curve,
         },
     }
     with open(args.out, "w") as f:

@@ -95,6 +95,13 @@ class _FunctionChecker:
         if isinstance(node, ast.BoolOp):
             return all(self.is_static(v) for v in node.values)
         if isinstance(node, ast.Compare):
+            # ``x is None`` / ``x is not None`` is host-static: a tracer is
+            # never None, so None-ness is fixed at trace time (the
+            # optional-input idiom, e.g. the fused kernel's alive mask)
+            if (all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+                    and all(isinstance(c, ast.Constant) and c.value is None
+                            for c in node.comparators)):
+                return True
             return self.is_static(node.left) and \
                 all(self.is_static(c) for c in node.comparators)
         if isinstance(node, (ast.Tuple, ast.List, ast.Set)):

@@ -74,6 +74,7 @@ def collate(index: DynamicIndex) -> DynamicIndex:
     out.num_docs = index.num_docs
     out.num_postings = index.num_postings
     out.num_words = index.num_words
+    out.tombstones = set(index.tombstones)
     out._cache = {}
     return out
 

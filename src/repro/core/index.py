@@ -67,6 +67,10 @@ class DynamicIndex:
         self.num_docs = 0
         self.num_postings = 0
         self.num_words = 0
+        # deleted docids (docid SPACE is never renumbered — postings stay in
+        # the BlockStore and every serving path masks members of this set;
+        # the next static freeze drops them from the encoded tier instead)
+        self.tombstones: set[int] = set()
         # host-side acceleration cache (pure cache of hash-array content; the
         # probe path below is the structure of record and tested against it)
         self._cache: dict[bytes, int] = {}
@@ -159,6 +163,21 @@ class DynamicIndex:
                 self.num_postings += 1
         return d
 
+    def delete_document(self, docid: int) -> None:
+        """Tombstone one document (the takedown primitive).
+
+        The docid keeps its ordinal meaning — postings stay in the
+        BlockStore and ``num_docs`` is NOT decremented, so round-robin
+        arithmetic, tier horizons, and device images are all unaffected.
+        Serving paths mask tombstoned docids; the next static freeze drops
+        them from the encoded tier (see ``StaticIndex.freeze``)."""
+        if not 1 <= docid <= self.num_docs:
+            raise ValueError(f"docid {docid} out of range "
+                             f"[1, {self.num_docs}]")
+        if docid in self.tombstones:
+            raise ValueError(f"docid {docid} already deleted")
+        self.tombstones.add(docid)
+
     def clone(self) -> "DynamicIndex":
         """Deep snapshot sharing no mutable state with the original.
 
@@ -176,6 +195,7 @@ class DynamicIndex:
         out.num_docs = self.num_docs
         out.num_postings = self.num_postings
         out.num_words = self.num_words
+        out.tombstones = set(self.tombstones)
         out._cache = {}
         return out
 
@@ -247,6 +267,7 @@ class DynamicIndex:
         collection's token count (Table 11's denominator)."""
         return {
             "num_docs": self.num_docs,
+            "deleted_docs": len(self.tombstones),
             "num_postings": self.num_postings,
             "num_words": self.num_words,
             "vocab_size": self.vocab_size,

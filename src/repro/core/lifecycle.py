@@ -84,6 +84,10 @@ class StaticTier:
     num_postings: int
     epoch: int
     encode_s: float | None = None
+    # tombstoned docids this tier's encode dropped (freeze-time compaction:
+    # the tier is rebuilt anyway, so dead docids are excluded for free —
+    # ``num_docs`` stays the docid HORIZON, which tombstoning never moves)
+    compacted: int = 0
 
 
 class FreezeCoordinator:
@@ -253,6 +257,14 @@ class FreezeManager:
         return tier.encode_s if tier is not None else None
 
     @property
+    def tombstones_compacted(self) -> int:
+        """Dead docids the PUBLISHED tier's encode dropped (rides on the
+        tier reference like every other freeze observable — tombstones only
+        grow, so this is monotone across swaps)."""
+        tier = self.tier
+        return tier.compacted if tier is not None else 0
+
+    @property
     def in_flight(self) -> bool:
         return self._thread is not None and self._thread.is_alive()
 
@@ -342,7 +354,8 @@ class FreezeManager:
                                       num_docs=snapshot.num_docs,
                                       num_postings=snapshot.num_postings,
                                       epoch=epoch,
-                                      encode_s=time.perf_counter() - t0)
+                                      encode_s=time.perf_counter() - t0,
+                                      compacted=len(snapshot.tombstones))
                     # atomic publish: ONE reference assignment of an
                     # immutable payload — epoch/freezes/last_freeze_s are
                     # all derived views of this reference, so there is no

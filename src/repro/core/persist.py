@@ -139,6 +139,11 @@ def _write_engine_state(eng, d: str) -> dict:
     _save_array(d, "vocab_off", vocab_off, crcs)
     _save_array(d, "fts", np.asarray(eng._fts, np.int64), crcs)
     _save_array(d, "doclens", np.asarray(eng._doclens, np.int64), crcs)
+    # tombstoned docids: the chains still hold the dead postings, so the
+    # mask must survive the restart byte-for-byte (forward index + live
+    # df/avgdl are derived from chains+tombstones at restore)
+    _save_array(d, "tombstones",
+                np.asarray(sorted(idx.tombstones), np.int64), crcs)
     _crash("term_map")
     # ONE load of the published tier reference: immutable payload, so the
     # snapshot is internally consistent even mid-background-freeze
@@ -151,7 +156,8 @@ def _write_engine_state(eng, d: str) -> dict:
         tier_meta = dict(meta)
         tier_meta.update(tier_num_docs=tier.num_docs,
                          tier_num_postings=tier.num_postings,
-                         tier_epoch=tier.epoch, encode_s=tier.encode_s)
+                         tier_epoch=tier.epoch, encode_s=tier.encode_s,
+                         tier_compacted=tier.compacted)
     _crash("tier")
     return {
         "engine": {
@@ -213,6 +219,11 @@ def _restore_engine_dir(d: str, frag: dict, engine_kwargs: dict):
     eng._tid = {tb: i for i, tb in enumerate(vocab)}
     eng._fts = [int(x) for x in _load_array(d, "fts", crcs)]
     eng._doclens = [int(x) for x in _load_array(d, "doclens", crcs)]
+    if "tombstones" in crcs:    # absent in pre-deletion snapshots
+        idx.tombstones = {int(x) for x in _load_array(d, "tombstones", crcs)}
+    # forward index, live document frequencies and the deleted-token total
+    # are derived state: rebuild from the restored chains + tombstones
+    eng._rebuild_forward()
     eng.version = int(cfg["version"])
     if frag["lifecycle"] is not None:
         eng.enable_tiering(FreezePolicy(**frag["lifecycle"]))
@@ -224,7 +235,8 @@ def _restore_engine_dir(d: str, frag: dict, engine_kwargs: dict):
             eng.lifecycle.tier = StaticTier(
                 index=static, num_docs=int(tm["tier_num_docs"]),
                 num_postings=int(tm["tier_num_postings"]),
-                epoch=int(tm["tier_epoch"]), encode_s=tm["encode_s"])
+                epoch=int(tm["tier_epoch"]), encode_s=tm["encode_s"],
+                compacted=int(tm.get("tier_compacted", 0)))
     return eng
 
 
@@ -382,7 +394,8 @@ def save_sharded(sharded, root: str, *, keep: int = 3) -> str:
             "max_in_flight": sharded.coordinator.max_in_flight,
             "counts": {"version": counts.version,
                        "num_docs": counts.num_docs,
-                       "total_tokens": counts.total_tokens},
+                       "total_tokens": counts.total_tokens,
+                       "deleted_docs": counts.deleted_docs},
             "shards": shards,
             "files": crcs,
         }
@@ -415,7 +428,8 @@ def restore_sharded(path_or_root: str, *, parallel: bool = True,
         parallel=parallel)
     c = man["counts"]
     fleet._counts = _FleetCounts(int(c["version"]), int(c["num_docs"]),
-                                 int(c["total_tokens"]))
+                                 int(c["total_tokens"]),
+                                 int(c.get("deleted_docs", 0)))
     crcs = man["files"]
     terms = _unblob(_load_array(snap, "ft_blob", crcs),
                     _load_array(snap, "ft_off", crcs))

@@ -401,6 +401,35 @@ class CollectionStats(NamedTuple):
         return arr
 
 
+def _tombstones(index):
+    """The index-like's tombstone set, or None when empty/absent.  Every
+    query operator masks members of this set — deleted documents' postings
+    stay in the chains (the docid space is never renumbered), so serving
+    correctness lives here."""
+    dead = getattr(index, "tombstones", None)
+    return dead if dead else None
+
+
+def _drop_dead(docids: np.ndarray, dead) -> np.ndarray:
+    """Filter tombstoned docids out of a result/postings array."""
+    if not dead or len(docids) == 0:
+        return docids
+    deadarr = np.fromiter(dead, dtype=np.int64, count=len(dead))
+    return docids[~np.isin(docids, deadarr)]
+
+
+def _live_postings(index, term, dead):
+    """Document-granular postings with tombstoned docs removed — the shape
+    every deletion-aware ranked scorer accumulates from (so live document
+    frequency is simply ``len(docids)``)."""
+    docids, fs = _doc_level_postings(index, term)
+    if not dead or len(docids) == 0:
+        return docids, fs
+    deadarr = np.fromiter(dead, dtype=np.int64, count=len(dead))
+    keep = ~np.isin(docids, deadarr)
+    return docids[keep], fs[keep]
+
+
 def term_stats(index: DynamicIndex, term) -> TermStats:
     h_ptr = index.lookup(term)
     if h_ptr is None:
@@ -463,7 +492,7 @@ def conjunctive_query(index: DynamicIndex, terms) -> np.ndarray:
     cursors = [PostingsCursor(index.store, h) for h in ptrs]
     if index.word_level:
         cursors = [WordPostingsCursor(c) for c in cursors]
-    return conjunctive_from_cursors(cursors)
+    return _drop_dead(conjunctive_from_cursors(cursors), _tombstones(index))
 
 
 def conjunctive_from_cursors(cursors) -> np.ndarray:
@@ -533,15 +562,27 @@ def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10,
     Returns (docids, scores) sorted by descending score, docid ascending
     within ties.
     """
-    N = index.num_docs if stats is None else stats.num_docs
+    dead = _tombstones(index)
+    if stats is None:
+        N = index.num_docs - (len(dead) if dead else 0)
+    else:
+        N = stats.num_docs
     cursors = []
     idfs = []
     for t in terms:
         c = doc_cursor(index, t)
         if c is None:
             continue
+        if stats is None:
+            # live document frequency: an index that never saw the dead
+            # documents would count exactly the surviving ones
+            ft = (len(_live_postings(index, t, dead)[0]) if dead
+                  else doc_ft(index, t))
+        else:
+            ft = stats.doc_ft(t)
+        if ft <= 0:
+            continue    # every containing doc is dead ≡ unknown term
         cursors.append(c)
-        ft = doc_ft(index, t) if stats is None else stats.doc_ft(t)
         idfs.append(np.log1p(N / ft))
     if not cursors:
         return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
@@ -552,6 +593,13 @@ def ranked_disjunctive(index: DynamicIndex, terms, k: int = 10,
         if not live:
             break
         d = min(c.docid for c in live)
+        if dead is not None and d in dead:
+            # skipped BEFORE the size-k heap: a dead entry would evict a
+            # live one at the boundary, not just vanish from the output
+            for c in cursors:
+                if not c.exhausted and c.docid == d:
+                    c.next()
+            continue
         score = 0.0
         for c, idf in zip(cursors, idfs):
             if not c.exhausted and c.docid == d:
@@ -581,11 +629,16 @@ def ranked_disjunctive_taat(index, terms, k: int = 10,
     sized by the LOCAL docid space; only the idf arithmetic goes global).
     """
     N = index.num_docs
-    Ns = N if stats is None else stats.num_docs
+    dead = _tombstones(index)
+    if stats is None:
+        Ns = N - (len(dead) if dead else 0)
+    else:
+        Ns = stats.num_docs
     scores = np.zeros(N + 1, dtype=np.float64)
     touched = False
     for t in terms:
-        docids, fs = _doc_level_postings(index, t)
+        # dead docs never reach the accumulator, so live df is len(docids)
+        docids, fs = _live_postings(index, t, dead)
         if len(docids) == 0:
             continue
         touched = True
@@ -609,6 +662,9 @@ def brute_conjunctive(index: DynamicIndex, terms) -> np.ndarray:
     if not sets:
         return np.zeros(0, dtype=np.int64)
     inter = set.intersection(*sets)
+    dead = _tombstones(index)
+    if dead:
+        inter -= dead
     return np.asarray(sorted(inter), dtype=np.int64)
 
 
@@ -622,6 +678,20 @@ def brute_conjunctive(index: DynamicIndex, terms) -> np.ndarray:
 # length array, which §3.6 explicitly places outside the core index ("we
 # consider that to be not part of the core inverted index").  DynamicIndex
 # callers maintain it trivially at ingest: doclens.append(len(terms)).
+
+
+def _live_avg_doclen(doclens: np.ndarray, N: int, dead) -> float:
+    """Average document length over LIVE docs only — the avgdl an index
+    that never ingested the tombstoned documents would report."""
+    if not N:
+        return 0.0
+    total = float(doclens[1:N + 1].sum())
+    live_n = N
+    if dead:
+        deadarr = np.fromiter(dead, dtype=np.int64, count=len(dead))
+        total -= float(doclens[deadarr].sum())
+        live_n -= len(dead)
+    return total / live_n if live_n else 0.0
 
 
 def bm25_weight(f_td, doclen, avg_len, f_t, N, k1=0.9, b=0.4):
@@ -644,15 +714,16 @@ def ranked_bm25(index, terms, doclens: np.ndarray,
     own length is partition-invariant).  Returns (docids, scores) by
     descending score, docid ascending within ties."""
     N = index.num_docs
+    dead = _tombstones(index)
     if stats is None:
-        Ns = N
-        avg = float(doclens[1:N + 1].mean()) if N else 0.0
+        Ns = N - (len(dead) if dead else 0)
+        avg = _live_avg_doclen(doclens, N, dead)
     else:
         Ns = stats.num_docs
         avg = stats.avg_doclen
     scores = np.zeros(N + 1, dtype=np.float64)
     for t in terms:
-        docids, fs = _doc_level_postings(index, t)
+        docids, fs = _live_postings(index, t, dead)
         if len(docids) == 0:
             continue
         ft = len(docids) if stats is None else stats.doc_ft(t)
@@ -721,7 +792,9 @@ def phrase_query(index: DynamicIndex, terms) -> np.ndarray:
         raise ValueError("phrase_query needs a word-level index (§5.1)")
     if not terms:
         return np.zeros(0, dtype=np.int64)
-    return phrase_from_cursors([word_cursor(index, t) for t in terms])
+    return _drop_dead(phrase_from_cursors([word_cursor(index, t)
+                                           for t in terms]),
+                      _tombstones(index))
 
 
 # --------------------------------------------------------------------------
@@ -822,9 +895,9 @@ def proximity_query(index, terms, window: int) -> np.ndarray:
         # most common term's documents (f_t is an O(1) head-block read on
         # the dynamic index, an engine counter on the tiered view)
         items.sort(key=lambda kv: ft(kv[0]))
-    return proximity_from_cursors(
+    return _drop_dead(proximity_from_cursors(
         [positional_cursor(index, t) for t, _ in items],
-        window, [m for _, m in items])
+        window, [m for _, m in items]), _tombstones(index))
 
 
 # --------------------------------------------------------------------------
@@ -871,16 +944,19 @@ def ranked_bm25_prox(index, terms, doclens: np.ndarray, k: int = 10,
     if not getattr(index, "word_level", False):
         raise ValueError("ranked_bm25_prox needs a word-level index")
     N = index.num_docs
+    dead = _tombstones(index)
     if stats is None:
-        Ns = N
-        avg = float(doclens[1:N + 1].mean()) if N else 0.0
+        Ns = N - (len(dead) if dead else 0)
+        avg = _live_avg_doclen(doclens, N, dead)
     else:
         Ns = stats.num_docs
         avg = stats.avg_doclen
     # pass 1 — the plain BM25 TAAT accumulation over doc-level postings
-    # (the tiered view's doc_postings never touches the w-gap stream)
+    # (the tiered view's doc_postings never touches the w-gap stream);
+    # tombstoned docs are dropped at the gather, so they neither score nor
+    # count toward presence in the positional pass
     uniq = list(dict.fromkeys(terms))
-    gathered = {t: _doc_level_postings(index, t) for t in uniq}
+    gathered = {t: _live_postings(index, t, dead) for t in uniq}
     scores = np.zeros(N + 1, dtype=np.float64)
     for t in terms:  # repeated query terms contribute per slot, as in BM25
         ds, fs = gathered[t]

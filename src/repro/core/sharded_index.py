@@ -216,9 +216,11 @@ class _FleetCounts:
     consistent (version, N, total_tokens) triple — three separate counter
     fields could be observed mid-update between stores."""
 
-    version: int        # bumps per ingested document (cache-key component)
-    num_docs: int
-    total_tokens: int
+    version: int        # bumps per ingested/deleted document (cache key)
+    num_docs: int       # docid HORIZON (includes tombstoned — round-robin
+    #                     assignment arithmetic must never renumber)
+    total_tokens: int   # LIVE token total (decremented at delete)
+    deleted_docs: int = 0   # tombstoned fleet-wide (live N = num_docs - this)
 
 
 class ShardedEngine:
@@ -334,9 +336,10 @@ class ShardedEngine:
         (integer sums below 2**53 are exact in float64)."""
         from .query import CollectionStats
         c = self._counts
+        live = c.num_docs - c.deleted_docs
         return CollectionStats(
-            num_docs=c.num_docs,
-            avg_doclen=c.total_tokens / c.num_docs if c.num_docs else 0.0,
+            num_docs=live,
+            avg_doclen=c.total_tokens / live if live else 0.0,
             ft=self._ft,
             fts_cache=self._gft_cache)
 
@@ -348,6 +351,10 @@ class ShardedEngine:
     @property
     def num_docs(self) -> int:
         return self._counts.num_docs
+
+    @property
+    def deleted_docs(self) -> int:
+        return self._counts.deleted_docs
 
     @property
     def num_postings(self) -> int:
@@ -390,7 +397,8 @@ class ShardedEngine:
                 if tid is not None and tid < len(arr):
                     arr[tid] = df
         self._counts = _FleetCounts(c.version + 1, g,
-                                    c.total_tokens + len(terms))
+                                    c.total_tokens + len(terms),
+                                    c.deleted_docs)
         local = self.engines[shard].add_document(terms)
         assert local == (g - 1) // self.num_shards + 1
         # a global ingest changes every shard's scoring state (N, f_t, avg
@@ -409,6 +417,50 @@ class ShardedEngine:
                 if s != shard and getattr(e, "lifecycle", None) is not None:
                     e.lifecycle.maybe_freeze()
         return g
+
+    def delete_document(self, docid: int) -> None:
+        """Tombstone one document fleet-wide (same single-writer model as
+        ``add_document``).  The global docid routes to its owner shard by
+        the round-robin arithmetic — no per-document map — and the owner's
+        returned ``(tid, occurrences)`` pairs mirror the document-frequency
+        decrements into the fleet's global ``_ft`` (and every materialized
+        per-shard aligned f_t array), so every shard immediately scores
+        with statistics of a collection that never held the document."""
+        c = self._counts
+        if not 1 <= docid <= c.num_docs:
+            raise ValueError(f"docid {docid} out of range 1..{c.num_docs}")
+        shard = (docid - 1) % self.num_shards
+        local = (docid - 1) // self.num_shards + 1
+        eng = self.engines[shard]
+        doclen = eng._doclens[local]
+        entry = eng.delete_document(local)  # raises on double delete
+        live = [(e._tid, arr) for e in self.engines
+                if (arr := self._gft_cache.get(id(e.vocab))) is not None]
+        for tid, _occ in entry:
+            tb = eng.vocab[tid]
+            df = self._ft.get(tb, 0) - 1
+            self._ft[tb] = df
+            for tid_map, arr in live:
+                t = tid_map.get(tb)
+                if t is not None and t < len(arr):
+                    arr[t] = df
+        # horizon stays put (docid arithmetic is append-only); live token
+        # total and the tombstone count move — published as ONE snapshot
+        self._counts = _FleetCounts(c.version + 1, c.num_docs,
+                                    c.total_tokens - doclen,
+                                    c.deleted_docs + 1)
+        # a delete changes every shard's scoring state (N, f_t, avg): bump
+        # the non-owner versions so their device images re-rebase
+        for s, e in enumerate(self.engines):
+            if s != shard:
+                e.version += 1
+
+    def update_document(self, docid: int, terms) -> int:
+        """Atomic-from-the-caller's-view revision: tombstone ``docid`` and
+        ingest ``terms`` as a NEW document (new global docid, returned) —
+        the same delete+add semantics as ``Engine.update_document``."""
+        self.delete_document(docid)
+        return self.add_document(terms)
 
     def collate_now(self) -> None:
         for e in self.engines:
@@ -522,6 +574,8 @@ class ShardedEngine:
         agg = EngineStats()
         for e in self.engines:
             s = e.stats()
+            agg.deleted_docs += s.deleted_docs
+            agg.tombstones_compacted += s.tombstones_compacted
             agg.num_postings += s.num_postings
             agg.num_words += s.num_words
             agg.queries += s.queries

@@ -253,11 +253,26 @@ class StaticIndex:
         paper's "fast conversion ... to a 'normal' static compressed
         inverted index".  Word-level indexes freeze too: the decoded
         occurrence stream (docids repeat, seconds = w-gaps) is regrouped
-        by ``add_list``."""
+        by ``add_list``.
+
+        Freeze-time compaction: tombstoned docids are dropped from every
+        list — the tier is rebuilt anyway, so the dead documents' postings
+        (and their share of the encoded bytes) vanish for free.  Dropping a
+        word-level document's whole occurrence run is safe because w-gaps
+        are INTRA-document (each doc's first occurrence carries its
+        absolute position).  ``num_docs`` stays the docid HORIZON — the
+        docid space is never renumbered, so the tiered merge arithmetic is
+        untouched."""
         out = cls(codec, word_level=index.word_level)
         out.num_docs = index.num_docs
+        dead = index.tombstones
+        deadarr = (np.asarray(sorted(dead), dtype=np.int64) if dead
+                   else None)
         for term, h_ptr in sorted(index.terms()):
             docids, seconds = index.store.decode_postings(h_ptr)
+            if deadarr is not None and len(docids):
+                keep = ~np.isin(docids, deadarr)
+                docids, seconds = docids[keep], seconds[keep]
             out.add_list(term, docids, seconds)
         return out
 

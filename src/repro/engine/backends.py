@@ -119,6 +119,13 @@ class TieredView:
     def word_level(self) -> bool:
         return self.engine.index.word_level
 
+    @property
+    def tombstones(self) -> set:
+        """The live tombstone set — deleted docids are masked across BOTH
+        tiers (the static tier may still hold docs tombstoned after its
+        freeze; the next encode compacts them away)."""
+        return self.engine.index.tombstones
+
     def ft(self, term) -> int:
         """f_t with the dynamic index's semantics, from the engine's O(1)
         global counters (operator-ordering heuristics, e.g. the proximity
@@ -227,6 +234,7 @@ class TieredBackend(Backend):
             # one fresh positional cursor per phrase slot, in phrase order
             d = hostq.phrase_from_cursors(
                 [view.cursor(t) for t in query.terms])
+            d = hostq._drop_dead(d, hostq._tombstones(view))
             return QueryResult(d, None, self.name)
         if query.mode == "proximity":
             # one positional cursor per UNIQUE term + its multiplicity:
@@ -251,6 +259,7 @@ class TieredBackend(Backend):
             # rarest-first via the engine's O(1) global f_t counters
             cursors.sort(key=lambda p: p[0])
             d = hostq.conjunctive_from_cursors([c for _, c in cursors])
+            d = hostq._drop_dead(d, hostq._tombstones(view))
             return QueryResult(d, None, self.name)
         if query.mode == "ranked_tfidf":
             d, s = hostq.ranked_disjunctive_taat(view, query.terms,
@@ -335,7 +344,9 @@ class PallasBackend(Backend):
         for other in lists[1:]:
             hit = spec.fn(a, jnp.asarray(other), interpret=self.interpret)
             flags &= np.asarray(hit)
-        return QueryResult(lists[0][flags].astype(np.int64), None, self.name)
+        d = hostq._drop_dead(lists[0][flags].astype(np.int64),
+                             hostq._tombstones(idx))
+        return QueryResult(d, None, self.name)
 
     def _ranked(self, query: Query) -> QueryResult:
         import jax
@@ -353,8 +364,13 @@ class PallasBackend(Backend):
             avg = stats.avg_doclen
         else:
             avg = float(doclens[1:N + 1].mean()) if N else 0.0
+        dead = hostq._tombstones(idx)
         for t in query.terms:
             docids, fs = idx.postings(t)
+            if dead and len(docids):
+                keep = ~np.isin(docids, np.fromiter(dead, np.int64,
+                                                    count=len(dead)))
+                docids, fs = docids[keep], fs[keep]
             if len(docids) == 0:
                 continue
             ft = len(docids) if stats is None else stats.doc_ft(t)

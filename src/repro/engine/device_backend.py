@@ -79,6 +79,7 @@ class ResidentImageManager:
         self._frozen = None             # writer_only — stats-rebased frozen
         self._delta = None              # writer_only — DeltaIndex
         self._doclens = None                           # (cap+1,) f32 device
+        self._alive = None              # (cap+1,) f32 liveness mask or None
         self._n_stat = None
         self._avg_stat = None                          # fleet avgdl (sharded)
         self._synced_version = -1                      # writer_only
@@ -170,7 +171,13 @@ class ResidentImageManager:
         N = eng.index.num_docs
         doc_cap = max(self._doc_cap, _pow2(N + 1))
         vocab_cap = max(self._vocab_cap, _pow2(len(eng.vocab)))
-        fts = eng.global_fts()
+        # scoring statistics: in a fleet, idf-N and avgdl are the
+        # COLLECTION's; with tombstones outstanding they are the engine's
+        # synthesized live counters — either way the delta must weight its
+        # postings with the SAME f_t as the frozen image (exact merge)
+        stats = eng.ranking_stats()
+        fts = (stats.fts_for(eng.vocab) if stats is not None
+               else np.asarray(eng._fts, dtype=np.int64))
         # the frozen image's chain metadata only changes when a bucket grows
         # or after a freeze; per-refresh work is just the f_t swap + delta
         if (self._frozen is None or doc_cap != self._doc_cap
@@ -185,9 +192,9 @@ class ResidentImageManager:
                                   num_docs=self._doc_cap,
                                   pad_vocab=self._vocab_cap,
                                   global_ft=local_fts)
-        if eng.stats_provider is not None:
-            # fleet mode: the delta weights its postings with the same
-            # collection-wide f_t as the frozen image (same idf, exact merge)
+        if stats is not None:
+            # fleet or deletion-aware mode: override the delta's baked
+            # store-level f_t with the collection-wide / live numbers
             ftp = np.zeros(int(delta.term_ft.shape[0]), np.int32)
             ftp[:min(len(fts), len(ftp))] = fts[:len(ftp)]
             delta.term_ft = jnp.asarray(ftp)
@@ -206,10 +213,17 @@ class ResidentImageManager:
         dl = np.zeros(self._doc_cap + 1, np.float32)
         dl[1:N + 1] = eng.doclens_array()[1:N + 1]
         self._doclens = jnp.asarray(dl)
-        # scoring statistics: in a fleet, idf-N and avgdl are the
-        # COLLECTION's (the fts above already came global via global_fts);
-        # doclens stays local — each doc's own length is partition-invariant
-        stats = eng.ranking_stats()
+        # liveness mask: tombstoned docids score 0 inside the fused kernel's
+        # accumulator; None (the common case) skips masking entirely so the
+        # no-delete path stays byte-identical to its pre-deletion programs
+        dead = eng.index.tombstones
+        if dead:
+            al = np.zeros(self._doc_cap + 1, np.float32)
+            al[1:N + 1] = 1.0
+            al[np.fromiter(dead, np.int64, count=len(dead))] = 0.0
+            self._alive = jnp.asarray(al)
+        else:
+            self._alive = None
         if stats is None:
             self._n_stat = jnp.int32(N)
             self._avg_stat = None
@@ -288,7 +302,7 @@ def fused_execute(engine, resident: ResidentImageManager,
                   max_blocks=tuple(caps),
                   doclens=resident._doclens if mode == "bm25" else None,
                   n_stat=resident._n_stat, avg_stat=resident._avg_stat,
-                  flavor=flavor, interpret=interpret)
+                  alive=resident._alive, flavor=flavor, interpret=interpret)
     resident.batches_served += 1
     if mode == "conjunctive":
         matches = np.asarray(out)
@@ -366,6 +380,13 @@ class DeviceBackend(Backend):
         import jax.numpy as jnp
         eng = self.engine
         mgr = self.resident
+        if eng.index.tombstones:
+            # per-image top-k truncation happens BEFORE any tombstone mask
+            # could apply, so a dead doc can evict a live one from an
+            # image's k; the fused path masks inside the accumulator —
+            # delegate to it whenever deletes are outstanding
+            return fused_execute(eng, mgr, batch, mode, k, flavor="ref",
+                                 interpret=True, name=self.name)
         N = eng.index.num_docs
         tids: list[list[int] | None] = []
         for q in batch:

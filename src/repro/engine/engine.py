@@ -14,9 +14,9 @@ import time
 import numpy as np
 
 from ..core.collate import collate
-from ..core.index import DynamicIndex
+from ..core.index import DynamicIndex, group_occurrences
 from ..core.lifecycle import FreezeManager, FreezePolicy
-from ..core.query import TermStats
+from ..core.query import CollectionStats, TermStats
 from .backends import (
     HostBackend,
     PallasBackend,
@@ -26,6 +26,27 @@ from .backends import (
 from .device_backend import DeviceBackend, ResidentImageManager
 from .planner import Planner, PlannerConfig
 from .types import POSITIONAL_MODES, EngineStats, Query, QueryResult
+
+
+class _LiveFtMap:
+    """Read-only term-bytes → LIVE document frequency, backed directly by
+    the engine's incrementally-maintained counters (no dict materialized).
+    Plugged into :class:`CollectionStats` as its ``ft`` mapping when the
+    engine synthesizes deletion-aware statistics — ranked scorers then
+    weight with exactly the df an index that never saw the dead documents
+    would have."""
+
+    __slots__ = ("_tid", "_dfs")
+
+    def __init__(self, tid: dict, dfs: list):
+        self._tid = tid
+        self._dfs = dfs
+
+    def get(self, tb, default=0):
+        t = self._tid.get(tb)
+        if t is None:
+            return default
+        return self._dfs[t]
 
 
 class Engine:
@@ -90,8 +111,21 @@ class Engine:
         self.stats_provider = None
         self.vocab: list[bytes] = []      # tid -> term bytes
         self._tid: dict[bytes, int] = {}
-        self._fts: list[int] = []         # tid -> f_t, maintained at ingest
+        # tid -> LIVE f_t (doc-level: document frequency; word-level:
+        # occurrence count) — incremented at ingest, decremented at delete,
+        # so scorers and device images always weight with statistics of an
+        # index that never saw the dead documents
+        self._fts: list[int] = []
+        # tid -> LIVE document frequency on word-level engines (their _fts
+        # is an occurrence count; ranked idf needs doc granularity)
+        self._doc_dfs: list[int] = []
         self._doclens: list[int] = [0]    # 1-indexed via position-0 pad
+        # forward index: docid -> [(tid, occurrences)] per unique term
+        # (None once deleted — also the cheap not-deleted check); this is
+        # what lets delete_document decrement every per-term df exactly
+        # without a decode pass over the inverted chains
+        self._doc_tids: list = [None]     # 1-indexed via position-0 pad
+        self._deleted_tokens = 0          # Σ doclen over tombstoned docs
         self.stats_counters = EngineStats()
         # ONE resident device-image manager shared by the device and pallas
         # backends: a mixed stream pays for at most one frozen upload and
@@ -125,15 +159,55 @@ class Engine:
 
     def _adopt_existing(self) -> None:
         """Register terms/doclens of a pre-built index (doclens are
-        reconstructed as Σ f per doc — exact for doc-level indexes)."""
+        reconstructed as Σ f per doc — exact for doc-level indexes), plus
+        the forward index and live per-term statistics (the inverted
+        chains still hold tombstoned docs' postings, so live df/avgdl are
+        recovered by subtracting the tombstoned contributions)."""
+        word = self.index.word_level
         dl = np.zeros(self.index.num_docs + 1, np.int64)
         for term, _h in self.index.terms():
-            tid = self._intern(term)
+            self._intern(term)
             d, f = self.index.postings(term)
-            self._fts[tid] = len(d)
-            np.add.at(dl, d, f if not self.index.word_level else 1)
+            np.add.at(dl, d, f if not word else 1)
         self._doclens = dl.tolist()
+        self._rebuild_forward()
+        self._fts = [0] * len(self.vocab)
+        for d in range(1, self.index.num_docs + 1):
+            entry = self._doc_tids[d]
+            if entry is None:
+                continue
+            for tid, occ in entry:
+                self._fts[tid] += occ if word else 1
         self.version += 1
+
+    def _rebuild_forward(self) -> None:
+        """Derive the forward index (docid -> [(tid, occurrences)]), live
+        word-level document frequencies and the deleted-token total from the
+        inverted chains + tombstone set.  Vocabulary and ``_doclens`` must
+        already be registered.  Used by ``_adopt_existing`` and snapshot
+        restore — the chains and live ``_fts`` are the persisted state of
+        record; the forward index is always derived."""
+        word = self.index.word_level
+        doc_tids: list = [[] for _ in range(self.index.num_docs + 1)]
+        for term, _h in self.index.terms():
+            tid = self._tid[term]
+            d, f = self.index.postings(term)
+            ud, cnt = group_occurrences(d) if word else (d, f)
+            for dd, cc in zip(ud.tolist(), cnt.tolist()):
+                doc_tids[dd].append((tid, cc))
+        self._doc_dfs = [0] * len(self.vocab)
+        self._deleted_tokens = 0
+        dead = self.index.tombstones
+        for d in range(1, self.index.num_docs + 1):
+            if d in dead:
+                self._deleted_tokens += int(self._doclens[d])
+                doc_tids[d] = None
+                continue
+            if word:
+                for tid, _occ in doc_tids[d]:
+                    self._doc_dfs[tid] += 1
+        doc_tids[0] = None
+        self._doc_tids = doc_tids
 
     # ------------------------------------------------------------------
     # vocabulary / statistics
@@ -146,6 +220,7 @@ class Engine:
             self._tid[tb] = tid
             self.vocab.append(tb)
             self._fts.append(0)
+            self._doc_dfs.append(0)
         return tid
 
     def term_id(self, term) -> int | None:
@@ -156,9 +231,23 @@ class Engine:
         """The :class:`~repro.core.query.CollectionStats` to score with, or
         None when this engine's own statistics ARE the collection's (the
         single-engine case).  Backends pass this straight into the ranked
-        scorers."""
-        return self.stats_provider() if self.stats_provider is not None \
-            else None
+        scorers.
+
+        With tombstones outstanding (and no fleet provider), deletion-aware
+        statistics are synthesized from the engine's live counters: N minus
+        the dead, avgdl over live tokens, per-term LIVE document frequency
+        — so ranked scores are byte-identical to an index that never
+        ingested the deleted documents."""
+        if self.stats_provider is not None:
+            return self.stats_provider()
+        dead = self.index.tombstones
+        if not dead:
+            return None
+        live_n = self.index.num_docs - len(dead)
+        avg = ((self.index.num_words - self._deleted_tokens) / live_n
+               if live_n else 0.0)
+        dfs = self._doc_dfs if self.index.word_level else self._fts
+        return CollectionStats(live_n, avg, _LiveFtMap(self._tid, dfs))
 
     def global_fts(self) -> np.ndarray:
         """Current f_t per term id (device images rebase stats with this).
@@ -195,17 +284,66 @@ class Engine:
         this returns (device backends refresh their delta lazily)."""
         d = self.index.add_document(terms)
         tbs = [t.encode() if isinstance(t, str) else t for t in terms]
+        entry: list[tuple[int, int]] = []
         if self.index.word_level:
+            occ: dict[int, int] = {}
             for tb in tbs:  # §5.1: one posting (and one f_t tick) per occurrence
-                self._fts[self._intern(tb)] += 1
+                tid = self._intern(tb)
+                self._fts[tid] += 1
+                occ[tid] = occ.get(tid, 0) + 1
+            for tid, n in occ.items():  # first-occurrence order
+                self._doc_dfs[tid] += 1
+                entry.append((tid, n))
         else:
-            for tb in dict.fromkeys(tbs):  # dedupe, first-occurrence order
-                self._fts[self._intern(tb)] += 1
+            counts: dict[int, int] = {}
+            for tb in tbs:
+                tid = self._intern(tb)
+                counts[tid] = counts.get(tid, 0) + 1
+            for tid, f in counts.items():  # dedupe, first-occurrence order
+                self._fts[tid] += 1
+                entry.append((tid, f))
+        self._doc_tids.append(entry)
         self._doclens.append(len(terms))
         self.version += 1
         if self.lifecycle is not None:
             self.lifecycle.maybe_freeze()
         return d
+
+    def delete_document(self, docid: int) -> list[tuple[int, int]]:
+        """Tombstone one document (takedown/revision primitive).
+
+        Exact statistics maintenance via the forward index: every term the
+        document contained has its live f_t (and, word-level, document
+        frequency) decremented, and the live token total drops by the
+        document's length — so every ranked scorer and device image weights
+        as if the document was never ingested.  The docid keeps its ordinal
+        meaning (round-robin arithmetic, tier horizons, and device images
+        are unaffected); serving paths mask it, and the next freeze drops
+        it from the static tier.  Returns the document's ``(tid,
+        occurrences)`` pairs so a fan-out layer can mirror the df
+        decrements fleet-wide.  Writer thread only, like ``add_document``.
+        """
+        self.index.delete_document(docid)   # validates range + double delete
+        entry = self._doc_tids[docid]
+        word = self.index.word_level
+        for tid, n in entry:
+            self._fts[tid] -= n if word else 1
+            if word:
+                self._doc_dfs[tid] -= 1
+        self._deleted_tokens += self._doclens[docid]
+        self._doc_tids[docid] = None
+        self.version += 1
+        return entry
+
+    def update_document(self, docid: int, terms) -> int:
+        """Revise a document: tombstone the old docid, ingest the new
+        content under a FRESH ordinal docid (returned).  Docids are
+        immutable-once-assigned everywhere (tier horizons, device images,
+        round-robin arithmetic), so an update is delete + add by
+        construction — exactly the semantics of a rebuild that saw only
+        the new content."""
+        self.delete_document(docid)
+        return self.add_document(terms)
 
     def collate_now(self) -> None:
         """Full collation (§5.5): stop-the-world chain compaction, then the
@@ -306,12 +444,14 @@ class Engine:
     def stats(self) -> EngineStats:
         s = self.stats_counters
         s.num_docs = self.index.num_docs
+        s.deleted_docs = len(self.index.tombstones)
         s.num_postings = self.index.num_postings
         s.num_words = self.index.num_words
         s.vocab_size = len(self.vocab)
         if self.lifecycle is not None:
             s.freezes = self.lifecycle.freezes
             s.tier_epoch = self.lifecycle.epoch
+            s.tombstones_compacted = self.lifecycle.tombstones_compacted
         return s
 
 

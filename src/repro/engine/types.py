@@ -85,7 +85,11 @@ from ..core.query import TermStats  # noqa: E402  (re-export for planner)
 class EngineStats:
     """Counters surfaced by ``Engine.stats()`` (serving observability)."""
 
-    num_docs: int = 0
+    num_docs: int = 0         # ordinal docid horizon (includes tombstoned)
+    deleted_docs: int = 0     # tombstoned docids still masked at serve time
+    tombstones_compacted: int = 0  # dead docids dropped from the static
+    #                                tier by freeze-time compaction (total
+    #                                across all freezes)
     num_postings: int = 0
     num_words: int = 0        # total tokens ingested (= postings, word-level)
     vocab_size: int = 0

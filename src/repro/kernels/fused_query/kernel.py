@@ -36,13 +36,17 @@ from .ref import fused_tile
 DEFAULT_TQ = 8  # queries per grid step
 
 
-def _tile_kernel(*refs, n_parts: int, mode: str, k: int, F: int, cap: int):
-    ins, outs = refs[:7 * n_parts + 3], refs[7 * n_parts + 3:]
+def _tile_kernel(*refs, n_parts: int, mode: str, k: int, F: int, cap: int,
+                 has_alive: bool = False):
+    n_in = 7 * n_parts + 3 + (1 if has_alive else 0)
+    ins, outs = refs[:n_in], refs[n_in:]
     parts = tuple(tuple(r[...] for r in ins[7 * i:7 * i + 7])
                   for i in range(n_parts))
-    nterms, doclens, norm = (r[...] for r in ins[7 * n_parts:])
+    tail = [r[...] for r in ins[7 * n_parts:]]
+    nterms, doclens, norm = tail[0], tail[1], tail[2]
+    alive = tail[3] if has_alive else None
     out = fused_tile(parts, nterms, doclens, norm,
-                     mode=mode, k=k, F=F, cap=cap)
+                     mode=mode, k=k, F=F, cap=cap, alive=alive)
     if mode == "conjunctive":
         outs[0][...] = out
     else:
@@ -55,14 +59,16 @@ def _pad_q(a: jnp.ndarray, pad: int) -> jnp.ndarray:
 
 def fused_query_kernel(parts, nterms, doclens, bm25_norm, *, mode: str,
                        k: int, F: int, cap: int, tq: int = DEFAULT_TQ,
-                       interpret: bool = True):
+                       interpret: bool = True, alive=None):
     """Launch the fused kernel over per-image packed part tuples.
 
     ``parts`` is a tuple of (gat, start, end, seg, lastd0, dnum0, widf)
     per image, each gat shaped (Q, PB_i, B) with its own packed block
     capacity.  Q is padded up to a multiple of ``tq`` (padded rows have
-    ``end == 0`` everywhere, so they decode to nothing).  Returns what
-    :func:`ref.fused_tile` returns, sliced back to Q rows.
+    ``end == 0`` everywhere, so they decode to nothing).  ``alive`` is the
+    optional (cap+1,) liveness mask, broadcast to every grid step like the
+    doclens table.  Returns what :func:`ref.fused_tile` returns, sliced
+    back to Q rows.
     """
     Q = parts[0][0].shape[0]
     tq = min(tq, Q)
@@ -85,8 +91,11 @@ def fused_query_kernel(parts, nterms, doclens, bm25_norm, *, mode: str,
     ]
     args = tuple(a for part in parts for a in part) + (nterms, doclens,
                                                        bm25_norm)
+    if alive is not None:
+        in_specs += [pl.BlockSpec((alive.shape[0],), lambda i: (0,))]
+        args = args + (alive,)                    # broadcast liveness mask
     kern = functools.partial(_tile_kernel, n_parts=len(parts), mode=mode,
-                             k=k, F=F, cap=cap)
+                             k=k, F=F, cap=cap, has_alive=alive is not None)
     if mode == "conjunctive":
         matches = pl.pallas_call(
             kern, grid=grid, in_specs=in_specs,

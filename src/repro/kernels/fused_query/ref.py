@@ -225,7 +225,7 @@ def _scatter_add(acc: jnp.ndarray, docs: jnp.ndarray,
 
 
 def fused_tile(parts, nterms, doclens, bm25_norm, *, mode: str, k: int,
-               F: int, cap: int):
+               F: int, cap: int, alive=None):
     """Decode → docids → score → select for a tile of queries.
 
     Args:
@@ -241,6 +241,11 @@ def fused_tile(parts, nterms, doclens, bm25_norm, *, mode: str, k: int,
       bm25_norm: (2,) f32 — (k1*(1-b), k1*b/avgdl) (bm25 only).
       mode: "conjunctive" | "ranked_tfidf" | "bm25".
       k, F, cap: static top-k size, fold threshold, docid capacity.
+      alive: optional (cap+1,) f32 liveness mask (0.0 at tombstoned docids
+        and at index 0, 1.0 elsewhere) — dead documents' postings still
+        decode (they live in the uploaded images until the next freeze
+        compacts them away) but are masked out of the accumulator before
+        selection, so the fused path matches the host path under deletes.
 
     Returns ``matches (TQ, cap+1) bool`` for conjunctive, else
     ``(top_d (TQ, kk) i32, top_s (TQ, kk) f32)`` with kk = min(k, cap+1),
@@ -254,6 +259,8 @@ def fused_tile(parts, nterms, doclens, bm25_norm, *, mode: str, k: int,
             hits = _scatter_add(hits, docid.reshape(TQ, -1),
                                 valid.reshape(TQ, -1).astype(jnp.int32))
         matches = (hits == nterms[:, None]) & (nterms[:, None] > 0)
+        if alive is not None:
+            matches = matches & (alive > 0)[None, :]
         return matches.at[:, 0].set(False)
     score = jnp.zeros((TQ, cap + 1), jnp.float32)
     for part in parts:
@@ -269,6 +276,10 @@ def fused_tile(parts, nterms, doclens, bm25_norm, *, mode: str, k: int,
         w = jnp.where(valid, w, 0.0)
         score = _scatter_add(score, docid.reshape(TQ, -1),
                              w.reshape(TQ, -1))
+    if alive is not None:
+        # mask by select, not multiply: a fully-deleted term's padded idf
+        # could be ±inf, and inf * 0 would poison the accumulator with nan
+        score = jnp.where((alive > 0)[None, :], score, 0.0)
     # docids are the accumulator indices: top_k ties prefer the smaller
     # index, i.e. the smaller docid — canonical order for free.  Absent
     # docids hold exactly 0.0 and every real match scores > 0 (idf > 0),

@@ -115,6 +115,31 @@ class QueryService:
         self.ingest_latencies.append(time.perf_counter() - t0)
         return d
 
+    def delete(self, docid: int) -> None:
+        """Tombstone one document.  Pending queries were submitted while it
+        was still live, so they are FLUSHED first — the mirror image of
+        ``ingest``'s no-flush rule: an ingest only adds visibility (pending
+        queries may legally miss a later document), but a delete removes
+        it, and a pending query must not miss a document that was alive at
+        its submission.  The engine's version bump makes every cached
+        result under the old version unaddressable (invalidation is free,
+        same as ingest)."""
+        self.flush()
+        t0 = time.perf_counter()
+        self.engine.delete_document(docid)
+        self.ingest_latencies.append(time.perf_counter() - t0)
+
+    def update(self, docid: int, terms) -> int:
+        """Revise a document: tombstone ``docid``, ingest ``terms`` as a new
+        document (new docid returned).  Flushes pending queries first, like
+        ``delete`` — they must see the pre-revision state they were
+        submitted against."""
+        self.flush()
+        t0 = time.perf_counter()
+        d = self.engine.update_document(docid, terms)
+        self.ingest_latencies.append(time.perf_counter() - t0)
+        return d
+
     # -- querying -------------------------------------------------------
 
     def submit(self, query: Query) -> Ticket:
@@ -202,14 +227,19 @@ class QueryService:
     # -- streams --------------------------------------------------------
 
     def run_stream(self, ops) -> list[Ticket]:
-        """Drive a mixed stream of ("doc", terms) / ("query", Query) ops;
-        returns every query ticket in submission order."""
+        """Drive a mixed stream of ("doc", terms) / ("query", Query) /
+        ("delete", docid) / ("update", (docid, terms)) ops; returns every
+        query ticket in submission order."""
         tickets = []
         for kind, payload in ops:
             if kind == "doc":
                 self.ingest(payload)
             elif kind == "query":
                 tickets.append(self.submit(payload))
+            elif kind == "delete":
+                self.delete(payload)
+            elif kind == "update":
+                self.update(*payload)
             else:
                 raise ValueError(f"unknown op {kind!r}")
         self.flush()

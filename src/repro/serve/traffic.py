@@ -101,6 +101,7 @@ class TrafficReport:
     num_events: int = 0
     num_queries: int = 0
     num_ingests: int = 0
+    num_deletes: int = 0
     duration_s: float = 0.0
     p50_ms: float = 0.0
     p99_ms: float = 0.0
@@ -123,6 +124,7 @@ class TrafficReport:
                     ("num_events", self.num_events),
                     ("num_queries", self.num_queries),
                     ("num_ingests", self.num_ingests),
+                    ("num_deletes", self.num_deletes),
                     ("duration_s", self.duration_s),
                     ("p50_ms", self.p50_ms), ("p99_ms", self.p99_ms),
                     ("p999_ms", self.p999_ms), ("mean_ms", self.mean_ms),
@@ -178,7 +180,8 @@ def run_traffic(engine, schedule: list[Event], docs, *, max_batch: int = 32,
                 lat.append(max(done - arr, 0.0))
         pending[:] = [(t, a) for t, a in pending if id(t) in by_ticket]
 
-    n_q = n_i = 0
+    n_q = n_i = n_d = 0
+    ingested: list[int] = []    # ingest ordinal -> real docid
     for ev in schedule:
         sched = t_run0 + ev.at_s
         if pace:
@@ -189,7 +192,17 @@ def run_traffic(engine, schedule: list[Event], docs, *, max_batch: int = 32,
             drain(svc.flush())
             n_i += 1
             try:
-                svc.ingest(docs[ev.doc % len(docs)])
+                ingested.append(svc.ingest(docs[ev.doc % len(docs)]))
+            except Exception:
+                gap += 1
+                ingested.append(-1)     # keep later ordinals aligned
+        elif ev.kind == "delete":
+            # svc.delete flushes pending itself (they must see the doc
+            # alive); flushing here first lets drain() account latencies
+            drain(svc.flush())
+            n_d += 1
+            try:
+                svc.delete(ingested[ev.doc])
             except Exception:
                 gap += 1
         else:
@@ -210,7 +223,8 @@ def run_traffic(engine, schedule: list[Event], docs, *, max_batch: int = 32,
     t_run1 = clock()
 
     rep = TrafficReport(num_events=len(schedule), num_queries=n_q,
-                        num_ingests=n_i, duration_s=t_run1 - t_run0,
+                        num_ingests=n_i, num_deletes=n_d,
+                        duration_s=t_run1 - t_run0,
                         availability_gap=gap)
     if lat:
         a = np.asarray(lat, np.float64)

@@ -52,6 +52,10 @@ class WorkloadSpec:
     seed: int = 0
     num_events: int = 2000
     ingest_fraction: float = 0.2
+    # fraction of events that tombstone a random still-live prior ingest
+    # (0.0 = the historical ingest+query mix; a delete event with nothing
+    # yet deletable degrades to a query, keeping the stream seed-pure)
+    delete_fraction: float = 0.0
     num_distinct_queries: int = 64
     query_zipf_s: float = 1.07
     term_zipf_s: float = 1.07
@@ -67,6 +71,11 @@ class WorkloadSpec:
     def __post_init__(self):
         if not 0.0 <= self.ingest_fraction <= 1.0:
             raise ValueError("ingest_fraction must be in [0, 1]")
+        if not 0.0 <= self.delete_fraction <= 1.0:
+            raise ValueError("delete_fraction must be in [0, 1]")
+        if self.ingest_fraction + self.delete_fraction > 1.0:
+            raise ValueError("ingest_fraction + delete_fraction must "
+                             "not exceed 1")
         if self.num_distinct_queries < 1 or self.num_events < 1:
             raise ValueError("need >= 1 distinct query and >= 1 event")
         if min(self.rate_hz, self.off_rate_hz) <= 0:
@@ -77,11 +86,13 @@ class WorkloadSpec:
 
 @dataclass(frozen=True)
 class Event:
-    """One scheduled arrival: a query (with its Query value) or an ingest
-    (``doc`` indexes the driver's corpus, assigned in arrival order)."""
+    """One scheduled arrival: a query (with its Query value), an ingest
+    (``doc`` indexes the driver's corpus, assigned in arrival order), or a
+    delete (``doc`` is the INGEST ORDINAL of the victim — the driver maps
+    it to the real docid it got back from that ingest)."""
 
     at_s: float
-    kind: str                   # "query" | "ingest"
+    kind: str                   # "query" | "ingest" | "delete"
     query: Query | None = None
     doc: int | None = None
 
@@ -122,6 +133,7 @@ def generate_schedule(spec: WorkloadSpec, vocab: list[str]) -> list[Event]:
     events: list[Event] = []
     t = 0.0
     doc_counter = 0
+    alive: list[int] = []       # ingest ordinals not yet scheduled deleted
     on = True
     left = int(rng.geometric(1.0 / spec.mean_burst))
     while len(events) < spec.num_events:
@@ -133,9 +145,16 @@ def generate_schedule(spec: WorkloadSpec, vocab: list[str]) -> list[Event]:
         rate = spec.rate_hz if on else spec.off_rate_hz
         t += float(rng.exponential(1.0 / rate))
         left -= 1
-        if rng.random() < spec.ingest_fraction:
+        r = float(rng.random())
+        if r < spec.ingest_fraction:
             events.append(Event(at_s=t, kind="ingest", doc=doc_counter))
+            alive.append(doc_counter)
             doc_counter += 1
+        elif r < spec.ingest_fraction + spec.delete_fraction and alive:
+            # victim uniform over still-live prior ingests; each ordinal is
+            # deleted at most once (double deletes are an error downstream)
+            pick = int(rng.integers(len(alive)))
+            events.append(Event(at_s=t, kind="delete", doc=alive.pop(pick)))
         else:
             q = pool[int(rng.choice(len(pool), p=qp))]
             events.append(Event(at_s=t, kind="query", query=q))

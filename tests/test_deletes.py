@@ -1,0 +1,324 @@
+"""Deletion & update differential suite (ISSUE 9), deterministic half.
+
+The tentpole invariant: after ANY interleaving of add / delete / re-add /
+update — with freezes landing mid-stream — every query mode answers
+**byte-identically** to a rebuild-without oracle: a fresh engine
+ingesting only the surviving documents in their original order.  Docids
+map through the order-preserving correspondence (survivors keep their
+docids in the deleted engine; the oracle numbers them 1..L in the same
+order), so docid lists AND score doubles must match bit-for-bit —
+deletion is pure masking, never renumbering, and the synthesized live
+collection statistics (N, avg doclen, per-term ft) must equal a
+from-scratch build's exactly.
+
+This module is hypothesis-free so the seeded differentials, the
+EngineStats counter regressions, and the concurrent delete+freeze+query
+stress (run under ``pytest --sanitize`` in CI) always execute; the
+randomized property versions live in test_deletes_hypothesis.py (same
+split as test_persist / test_persist_hypothesis)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.lifecycle import FreezePolicy
+from repro.core.sharded_index import ShardedEngine
+from repro.engine import Engine, Query
+
+TERMS = [f"t{i}" for i in range(30)]
+
+
+def random_ops(seed: int, n: int = 40):
+    """A seeded add/delete/re-add/update stream in the same op shape the
+    hypothesis strategy draws — the deterministic smoke and the property
+    suite replay through the identical code path."""
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n):
+        r = rng.random()
+        doc = list(rng.integers(0, len(TERMS), size=int(rng.integers(1, 20))))
+        if r < 0.5:
+            ops.append(("add", doc))
+        elif r < 0.7:
+            ops.append(("delete", int(rng.integers(10 ** 6))))
+        elif r < 0.8:
+            ops.append(("readd", int(rng.integers(10 ** 6))))
+        else:
+            ops.append(("update", int(rng.integers(10 ** 6)), doc))
+    return ops
+
+
+def replay(ops, *, word_level=False, codec="bp128", every_docs=8):
+    """Apply ``ops`` to a fresh engine with a freeze policy aggressive
+    enough that static-tier publications land mid-history.  Victim
+    indices reduce mod the live count, so any drawn op is valid against
+    whatever state the prefix produced; "readd" resurrects a previously
+    deleted document's terms as a NEW docid.  Returns ``(engine, live)``
+    where ``live`` is the surviving ``(docid, terms)`` list in ingestion
+    (hence docid) order."""
+    eng = Engine(word_level=word_level,
+                 tier_policy=FreezePolicy(codec=codec, every_docs=every_docs,
+                                          background=False))
+    live: list[tuple[int, list]] = []
+    graveyard: list[list] = []
+    for op in ops:
+        if op[0] == "add":
+            terms = [TERMS[i] for i in op[1]]
+            live.append((eng.add_document(terms), terms))
+        elif op[0] == "delete":
+            if not live:
+                continue
+            docid, terms = live.pop(op[1] % len(live))
+            eng.delete_document(docid)
+            graveyard.append(terms)
+        elif op[0] == "readd":
+            if not graveyard:
+                continue
+            terms = graveyard[op[1] % len(graveyard)]
+            live.append((eng.add_document(terms), terms))
+        else:  # update: tombstone victim, re-ingest new terms as new docid
+            if not live:
+                continue
+            docid, _ = live.pop(op[1] % len(live))
+            terms = [TERMS[i] for i in op[2]]
+            live.append((eng.update_document(docid, terms), terms))
+    return eng, live
+
+
+def probes(word_level):
+    qs = [Query(terms=("t0",), mode="conjunctive"),
+          Query(terms=("t0", "t1"), mode="conjunctive"),
+          Query(terms=("t0", "t2"), mode="ranked_tfidf", k=8),
+          Query(terms=("t1", "t2"), mode="bm25", k=8),
+          Query(terms=("t0", "t1", "t3"), mode="bm25", k=8)]
+    if word_level:
+        qs += [Query(terms=("t0", "t1"), mode="phrase"),
+               Query(terms=("t0", "t2"), mode="proximity", window=4),
+               Query(terms=("t0", "t1"), mode="bm25_prox", k=8)]
+    return qs
+
+
+def make_oracle(live, word_level):
+    """Rebuild-without oracle: only the survivors, original order.  The
+    returned ``mapping`` sends oracle docids to deleted-engine docids;
+    it is strictly increasing, so ranked tie order is preserved."""
+    oracle = Engine(word_level=word_level)
+    mapping = [0]
+    for docid, terms in live:
+        oracle.add_document(terms)
+        mapping.append(docid)
+    return oracle, mapping
+
+
+def assert_matches_oracle(execute, live, word_level, backends,
+                          same_backend=False):
+    """``execute(query)`` must answer byte-identically (docids through the
+    order-preserving map; scores bit-for-bit) to the rebuild-without
+    oracle for every probe mode on every backend.  ``same_backend=True``
+    forces the oracle onto the backend under test — the device/pallas
+    paths score in f32, so their parity contract is against the oracle's
+    own device answer, not the host's f64 arithmetic."""
+    oracle, mapping = make_oracle(live, word_level)
+    for q in probes(word_level):
+        for backend in backends:
+            exp = oracle.execute(Query(
+                terms=q.terms, mode=q.mode, k=q.k, window=q.window,
+                backend=backend if same_backend else None))
+            exp_ids = [mapping[d] for d in exp.docids.tolist()]
+            got = execute(Query(terms=q.terms, mode=q.mode, k=q.k,
+                                window=q.window, backend=backend))
+            assert got.docids.tolist() == exp_ids, (q.mode, backend)
+            if exp.scores is None:
+                assert got.scores is None
+            else:
+                assert np.array_equal(got.scores, exp.scores), \
+                    (q.mode, backend)
+
+
+# --------------------------------------------------------------------------
+# seeded differential smoke: the tentpole invariant without hypothesis
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("word_level", [False, True])
+@pytest.mark.parametrize("codec", ["bp128", "interp"])
+def test_delete_rebuild_differential_seeded(word_level, codec):
+    """Three seeded interleavings per (codec, granularity) cell: host and
+    tiered serving are indistinguishable from an index that never
+    contained the dead documents."""
+    for seed in (0, 1, 2):
+        eng, live = replay(random_ops(seed), word_level=word_level,
+                           codec=codec)
+        assert_matches_oracle(eng.execute, live, word_level,
+                              backends=("host", "tiered"))
+        assert eng.stats().deleted_docs == eng.index.num_docs - len(live)
+
+
+def test_delete_rebuild_differential_device_seeded():
+    """The fused doc-level modes on the device/pallas path: the in-kernel
+    liveness mask must reproduce the oracle exactly (dead documents can
+    never occupy — or displace anything from — a top-k slot)."""
+    eng, live = replay(random_ops(3))
+    assert_matches_oracle(eng.execute, live, False,
+                          backends=("device", "pallas"), same_backend=True)
+
+
+def test_sharded_delete_differential_seeded():
+    """4-shard fleet: delete fan-out (round-robin docid arithmetic + fleet
+    counter decrements) keeps every shard-merged answer byte-identical to
+    the single-engine rebuild-without oracle — global ranking statistics
+    must shed deleted documents exactly."""
+    fleet = ShardedEngine(num_shards=4, B=64, growth="const")
+    try:
+        live = replay_fleet(fleet, random_ops(4))
+        assert fleet.deleted_docs == fleet.num_docs - len(live)
+        assert_matches_oracle(lambda q: fleet.execute_many([q])[0], live,
+                              False, backends=(None,))
+    finally:
+        fleet.close()
+
+
+def replay_fleet(fleet, ops):
+    """Fleet-side replay (no "readd": the graveyard bookkeeping adds
+    nothing over update at this layer)."""
+    live: list[tuple[int, list]] = []
+    for op in ops:
+        if op[0] == "add":
+            terms = [TERMS[i] for i in op[1]]
+            live.append((fleet.add_document(terms), terms))
+        elif op[0] == "delete":
+            if live:
+                docid, _ = live.pop(op[1] % len(live))
+                fleet.delete_document(docid)
+        elif op[0] == "update":
+            if live:
+                docid, _ = live.pop(op[1] % len(live))
+                terms = [TERMS[i] for i in op[2]]
+                live.append((fleet.update_document(docid, terms), terms))
+    return live
+
+
+def test_delete_survives_snapshot_restore_seeded(tmp_path):
+    """Tombstones are persisted state of record: a restored engine answers
+    byte-identically to the never-restarted one AND stays fully live —
+    deletes and ingests after restore still track the oracle."""
+    eng, live = replay(random_ops(5))
+    eng.snapshot(str(tmp_path))
+    restored = Engine.restore(str(tmp_path))
+    assert restored.stats().deleted_docs == eng.stats().deleted_docs
+    assert_matches_oracle(restored.execute, live, False,
+                          backends=("host", "tiered"))
+    # the restored engine is not a read-only artifact: keep mutating
+    if live:
+        docid, _ = live.pop(0)
+        restored.delete_document(docid)
+    live.append((restored.add_document(["t0", "t1", "t2"]),
+                 ["t0", "t1", "t2"]))
+    assert_matches_oracle(restored.execute, live, False,
+                          backends=("host", "tiered"))
+
+
+# --------------------------------------------------------------------------
+# counters + concurrency (satellite: EngineStats regression, sanitized)
+# --------------------------------------------------------------------------
+
+
+def test_engine_stats_delete_counters():
+    """deleted_docs counts live tombstones; tombstones_compacted reports
+    what the most recent freeze dropped from the static tier."""
+    eng = Engine(B=64, growth="const", tier_policy=FreezePolicy())
+    docs = [[f"t{i % 7}", f"t{(i + 1) % 7}"] for i in range(10)]
+    ids = [eng.add_document(d) for d in docs]
+    assert eng.stats().deleted_docs == 0
+    for d in ids[:3]:
+        eng.delete_document(d)
+    st = eng.stats()
+    assert st.deleted_docs == 3
+    assert st.tombstones_compacted == 0          # no freeze yet
+    eng.lifecycle.freeze(blocking=True)
+    assert eng.stats().tombstones_compacted == 3
+    assert eng.static_tier().compacted == 3
+    # update = tombstone + re-ingest: one more deleted, one more doc
+    new = eng.update_document(ids[5], ["t0", "t1"])
+    st = eng.stats()
+    assert st.deleted_docs == 4 and new == 11
+    # double delete is an error; the counter must not double-count
+    with pytest.raises(ValueError):
+        eng.delete_document(ids[0])
+    assert eng.stats().deleted_docs == 4
+
+
+def test_sharded_stats_delete_counters():
+    """The fleet aggregate carries the deletion counters across shards."""
+    fleet = ShardedEngine(num_shards=4, B=64, growth="const",
+                          tier_policy=FreezePolicy())
+    try:
+        ids = [fleet.add_document([f"t{i % 5}", f"t{(i + 2) % 5}"])
+               for i in range(12)]
+        for d in ids[:5]:
+            fleet.delete_document(d)
+        st = fleet.stats()
+        assert st.deleted_docs == 5
+        for e in fleet.engines:
+            e.lifecycle.freeze(blocking=True)
+        assert fleet.stats().tombstones_compacted == 5
+    finally:
+        fleet.close()
+
+
+def test_concurrent_delete_freeze_query_stress():
+    """Single-writer delete+ingest stream with BACKGROUND freezes landing
+    mid-stream (compaction runs concurrently with tombstoning) and reader
+    threads watching lifecycle metadata; every query differentially
+    checked host-vs-tiered.  Runs under ``pytest --sanitize`` in CI, so
+    any lock-order inversion or data race in the delete path fails here."""
+    rng = np.random.default_rng(5)
+    vocab = [f"t{i}" for i in range(60)]
+    docs = [[vocab[i] for i in rng.choice(60, size=rng.integers(4, 25))]
+            for _ in range(240)]
+    eng = Engine(B=64, growth="const",
+                 tier_policy=FreezePolicy(every_docs=25, background=True))
+    mgr = eng.lifecycle
+    stop = threading.Event()
+    bad: list = []
+
+    def reader():
+        while not stop.is_set():
+            tier = mgr.tier
+            if tier is not None and tier.compacted < 0:
+                bad.append(tier.compacted)
+            _ = mgr.epoch
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    live: list[int] = []
+    deleted = 0
+    try:
+        for i, d in enumerate(docs):
+            live.append(eng.add_document(d))
+            if i % 3 == 2:
+                eng.delete_document(live.pop(int(rng.integers(len(live)))))
+                deleted += 1
+            if i % 5 == 4:
+                q = Query(terms=(vocab[0], vocab[3]), mode="bm25", k=10)
+                rt = eng.execute(Query(terms=q.terms, mode=q.mode, k=q.k,
+                                       backend="tiered"))
+                rh = eng.execute(Query(terms=q.terms, mode=q.mode, k=q.k,
+                                       backend="host"))
+                assert rt.docids.tolist() == rh.docids.tolist()
+                assert np.array_equal(rt.scores, rh.scores)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    mgr.wait()
+    assert not bad
+    st = eng.stats()
+    assert st.deleted_docs == deleted
+    assert st.freezes >= 1
+    # the LAST completed freeze compacted the tombstones it saw; a final
+    # blocking freeze must account for every one of them
+    eng.lifecycle.freeze(blocking=True)
+    assert eng.stats().tombstones_compacted == deleted
