@@ -56,6 +56,13 @@ observed inside ``StaticIndex.freeze`` and the availability gap (queries
 during the freeze storm that failed or disagreed with a single-engine
 oracle — must be zero).
 
+plus the **ingest** section (PR 10): write-path throughput in docs/s and
+GB/min — a single-engine batch-size sweep (batch=1 is the sequential
+baseline), the pipelined per-shard writer queues at 1/2/4 shards, and a
+sustained mixed ingest+BM25 stream where every query pays the
+immediate-access barrier (``--ingest-only`` runs just this section, the CI
+smoke artifact);
+
 plus the **deletes** curve (ISSUE 9): a fresh engine over the full corpus
 is frozen, then cumulatively tombstoned to 0/10/25/50% deleted; at each
 point host/tiered/pallas latency is measured before and after the next
@@ -91,6 +98,21 @@ def _timed(fn, reps=3):
     for _ in range(reps):
         fn()
     return warmup, (time.perf_counter() - t0) / reps
+
+
+def merge_out(path, payload):
+    """Merge ``payload`` over whatever JSON already lives at ``path`` —
+    each bench owns its own top-level keys and must never clobber the
+    others' (traffic_bench follows the same rule for ``traffic``)."""
+    try:
+        with open(path) as f:
+            base = json.load(f)
+    except (OSError, ValueError):
+        base = {}
+    base.update(payload)
+    with open(path, "w") as f:
+        json.dump(base, f, indent=2)
+    return base
 
 
 def crossover_sweep(corpus, Engine, Query, FreezePolicy, rng, *,
@@ -136,11 +158,122 @@ def crossover_sweep(corpus, Engine, Query, FreezePolicy, rng, *,
     return rows
 
 
+def ingest_bench(docs, *, batches=(1, 64, 256, 1024), shards=(1, 2, 4),
+                 mixed_chunk=128, mixed_queries=8):
+    """The PR-10 write-path section: batched/pipelined ingest throughput.
+
+    Reports docs/s and GB/min (decimal GB of raw corpus text, the paper's
+    unit) for (a) a single-engine batch-size sweep — ``batch=1`` is the
+    sequential baseline every speedup is quoted against, (b) the pipelined
+    write path at 1/2/4 shards (per-shard writer queues; wall-clock from
+    first submit to full drain), and (c) a sustained mixed stream: batched
+    ingest through a pipelined QueryService with BM25 queries interleaved,
+    each query paying the immediate-access barrier."""
+    import time as _t
+
+    from repro.core.sharded_index import ShardedEngine
+    from repro.engine import Engine, Query
+    from repro.serve.ingest_pipeline import IngestPipeline
+    from repro.serve.query_service import QueryService
+
+    corpus_bytes = sum(len(t) + 1 for d in docs for t in d)
+    gb = corpus_bytes / 1e9
+
+    def run(label, make, reps=3):
+        """Best of ``reps`` passes, each over a FRESH engine (ingest has no
+        warm steady state to average like the query benches — repeating
+        into the same index would measure a different, larger collection),
+        so one GC pause or scheduler hiccup cannot misprice the write
+        path."""
+        dt = None
+        for _ in range(reps):
+            fn = make()
+            t0 = _t.perf_counter()
+            fn()
+            d = _t.perf_counter() - t0
+            dt = d if dt is None else min(dt, d)
+        row = {"docs_per_s": len(docs) / dt, "gb_per_min": gb / dt * 60,
+               "wall_s": dt}
+        print(f"ingest {label:24s} {row['docs_per_s']:10.0f} docs/s "
+              f"{row['gb_per_min']:8.3f} GB/min")
+        return row
+
+    out = {"docs": len(docs), "corpus_mb": corpus_bytes / 2**20,
+           "batch_sweep": [], "shards": [], "mixed": None}
+
+    batches = (*batches, len(docs))     # whole-corpus batch caps the sweep
+    for bs in batches:
+        def make(bs=bs):
+            eng = Engine(B=64, growth="const")
+            if bs == 1:
+                def go():
+                    for d in docs:
+                        eng.add_document(d)
+            else:
+                def go():
+                    for i in range(0, len(docs), bs):
+                        eng.add_documents(docs[i:i + bs])
+            return go
+        row = {"batch": bs, **run(f"batch={bs}", make)}
+        out["batch_sweep"].append(row)
+    base = out["batch_sweep"][0]["docs_per_s"]
+    best = max(out["batch_sweep"], key=lambda r: r["docs_per_s"])
+    out["sequential_docs_per_s"] = base
+    out["batch_speedup"] = best["docs_per_s"] / base
+    bs = best["batch"]
+
+    for nsh in shards:
+        def make(nsh=nsh):
+            target = (Engine(B=64, growth="const") if nsh == 1
+                      else ShardedEngine(num_shards=nsh, B=64,
+                                         growth="const"))
+
+            def go():
+                with IngestPipeline(target) as pipe:
+                    for i in range(0, len(docs), bs):
+                        pipe.submit(docs[i:i + bs])
+                    pipe.drain()
+                if nsh > 1:
+                    target.close()
+            return go
+        row = {"shards": nsh, "batch": bs,
+               **run(f"pipelined x{nsh}", make)}
+        out["shards"].append(row)
+
+    counts = {"queries": 0}
+
+    def make_mixed():
+        fleet = ShardedEngine(num_shards=2, B=64, growth="const")
+        svc = QueryService(fleet, pipelined=True)
+        probe = tuple(docs[0][:3])
+
+        def go():
+            n_q = 0
+            for i in range(0, len(docs), mixed_chunk):
+                svc.ingest_batch(docs[i:i + mixed_chunk])
+                for _ in range(mixed_queries):
+                    svc.query(Query(terms=probe, mode="bm25", k=10))
+                    n_q += 1
+            counts["queries"] = n_q
+            svc.close()
+            fleet.close()
+        return go
+
+    row = run("mixed ingest+bm25", make_mixed)
+    row["queries"] = counts["queries"]
+    row["qps"] = counts["queries"] / row["wall_s"]
+    out["mixed"] = row
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=1200)
     ap.add_argument("--queries", type=int, default=32)
     ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--ingest-only", action="store_true",
+                    help="run only the write-path section (CI smoke): "
+                         "writes {'ingest': ...} to --out and exits")
     args = ap.parse_args()
 
     from benchmarks.common import corpus
@@ -153,6 +286,11 @@ def main() -> None:
     docs = corpus(args.docs)
     rng = np.random.default_rng(17)
     freeze_at = int(args.docs * 0.7)
+
+    if args.ingest_only:
+        merge_out(args.out, {"ingest": ingest_bench(docs)})
+        print(f"ingest section -> {args.out}")
+        return
 
     eng = Engine(B=64, growth="const", tier_policy=FreezePolicy())
     t0 = time.perf_counter()
@@ -481,6 +619,9 @@ def main() -> None:
               f"{row['static_total_bytes_after_compaction']} B "
               f"({row['tombstones_compacted']} docids compacted)")
 
+    # ---- batched/pipelined write path (PR 10) ----
+    ingest_section = ingest_bench(docs)
+
     payload = {
         "config": {"docs": eng.index.num_docs,
                    "postings": eng.index.num_postings,
@@ -541,9 +682,9 @@ def main() -> None:
             "delete_order_seed": 23,
             "curve": deletes_curve,
         },
+        "ingest": ingest_section,
     }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
+    payload = merge_out(args.out, payload)
 
     # round-trip: the planner consumes the file we just wrote.  Record how
     # a measured-threshold planner actually routes each swept mode across
@@ -561,8 +702,7 @@ def main() -> None:
                 device_capable=True).backend
             for bs in (1, 8, 32)}
     payload["crossover"]["planner_routing"] = routing
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
+    merge_out(args.out, payload)
     print(f"planner routing from measured crossover: {routing}")
 
     print(f"\ndelta refresh {payload['delta']['incremental_refresh_ms']:.1f} ms"

@@ -25,6 +25,7 @@ CONCURRENT_MODULES = [
     "src/repro/engine/engine.py",
     "src/repro/engine/device_backend.py",
     "src/repro/serve/query_service.py",
+    "src/repro/serve/ingest_pipeline.py",
     "src/repro/core/sharded_index.py",
 ]
 

@@ -289,6 +289,133 @@ class BlockStore:
         self.set_lastd(hb, d)       # line 19
         self.set_ft(hb, self.get_ft(hb) + 1)  # line 20
 
+    def append_run(self, h_ptr: int, postings) -> None:
+        """Append a run of postings ``[(d, second), ...]`` for one term.
+
+        The batched write path: equivalent to calling :meth:`add_posting`
+        once per pair (the decoded chain is identical), but the head fields
+        (t_ptr, last_d, ft, nx, the tail's d_num) are hoisted into locals
+        for the whole run, and the run is Double-VByte coded CONTIGUOUSLY
+        into one staging bytearray that is flushed into the block array
+        with a single slice assignment per block segment — the per-posting
+        accessor walk that dominates ``add_document`` is paid once per run
+        instead.  Only a block-boundary posting is recoded mid-stage (its
+        b-gap changes, Algorithm 1 line 8; everything after it is coded
+        relative to its predecessor and is unaffected).
+
+        ``postings`` must be in ingest order (ascending d; word-level runs
+        repeat d once per occurrence, in word order) — exactly the per-term
+        subsequence a sequential ingest would have produced.
+        """
+        B, F = self.B, self.F
+        word = self.word_level
+        const = self.const_mode
+        I = self.I
+        hb = h_ptr * B
+        # one slice view reads all four head u32s (vs four accessor calls)
+        d_num, t_ptr, last_d, ft = I[hb:hb + 16].view(np.uint32).tolist()
+        tb = t_ptr * B
+        nx = int(I[hb + 16])
+        if not const:
+            nx |= int(I[hb + 17]) << 8
+        z = 1 if const else int(I[hb + 18])
+        tail_cap = B if const else self.block_size_at(z)
+        # first docnum of the current tail (slot 0 — d_num while tail)
+        t_dnum = d_num if t_ptr == h_ptr else self._get_u32(tb + _OFF_NPTR)
+        buf = bytearray()
+        ba = buf.append
+        flush_at = tb + nx          # byte offset the staged run lands at
+        for d, second in postings:
+            # Algorithm 2 inlined, size-first: the code's byte length is
+            # arithmetic on the folded value, so the fit check (line 6)
+            # runs before any byte is staged — no rollback
+            if word:
+                major, minor = second, d - last_d + 1
+            else:
+                major, minor = d - last_d, second
+            if minor < F:
+                x = (major - 1) * F + minor
+                y = 0
+                nbytes = 1 if x < 0x80 else 2 if x < 0x4000 else \
+                    3 if x < 0x200000 else 4 if x < 0x10000000 else 5
+            else:
+                x = major * F
+                y = minor - F + 1
+                nbytes = (1 if x < 0x80 else 2 if x < 0x4000 else
+                          3 if x < 0x200000 else 4 if x < 0x10000000 else 5) \
+                    + (1 if y < 0x80 else 2 if y < 0x4000 else
+                       3 if y < 0x200000 else 4 if y < 0x10000000 else 5)
+            if nx + nbytes > tail_cap:      # Algorithm 1 line 6
+                # recode relative to the old tail's first docnum (line 8)
+                if word:
+                    minor = d - t_dnum + 1
+                else:
+                    major = d - t_dnum
+                if minor < F:
+                    x, y = (major - 1) * F + minor, 0
+                else:
+                    x, y = major * F, minor - F + 1
+                if buf:                     # flush the staged run so far
+                    I[flush_at:flush_at + len(buf)] = \
+                        np.frombuffer(buf, dtype=np.uint8)
+                    buf = bytearray()
+                    ba = buf.append
+                I[tb + nx:tb + tail_cap] = 0    # line 11: null-close
+                new_z = z + 1
+                new_size = B if const else self.block_size_at(new_z)
+                slots = self._slots_for(new_size)
+                self._ensure_capacity(slots)
+                I = self.I                  # may have been reallocated
+                new_ptr = self.nblocks
+                self.nblocks += slots
+                nb = new_ptr * B
+                self._set_u32(nb + _OFF_NPTR, d)        # line 12
+                self._set_u32(tb + _OFF_NPTR, new_ptr)  # line 13
+                self.set_z(hb, new_z)
+                t_ptr, tb, z = new_ptr, nb, new_z
+                tail_cap = new_size
+                nx = H
+                flush_at = tb + H
+                t_dnum = d
+                before = len(buf)           # line 16/17: recoded emit
+                while x >= 0x80:
+                    ba(0x80 | (x & 0x7F))
+                    x >>= 7
+                ba(x)
+                if y:
+                    while y >= 0x80:
+                        ba(0x80 | (y & 0x7F))
+                        y >>= 7
+                    ba(y)
+                nx += len(buf) - before     # b-gap code length differs
+                last_d = d
+                ft += 1
+                continue
+            if ft == 0:
+                # first posting ever: head slot 0 doubles as d_num
+                self._set_u32(hb + _OFF_NPTR, d)
+                t_dnum = d
+            while x >= 0x80:                # line 17: stage the code bytes
+                ba(0x80 | (x & 0x7F))
+                x >>= 7
+            ba(x)
+            if y:
+                while y >= 0x80:
+                    ba(0x80 | (y & 0x7F))
+                    y >>= 7
+                ba(y)
+            nx += nbytes                # line 18 (staged)
+            last_d = d
+            ft += 1                     # line 20
+        if buf:
+            I[flush_at:flush_at + len(buf)] = \
+                np.frombuffer(buf, dtype=np.uint8)
+        # one slice view writes t_ptr / last_d / ft back (line 13/19/20)
+        I[hb + 4:hb + 16].view(np.uint32)[:] = (t_ptr, last_d, ft)
+        I[hb + 16] = nx & 0xFF          # line 18
+        if not const:
+            I[hb + 17] = (nx >> 8) & 0xFF
+
     # ------------------------------------------------------------------
     # chain traversal / decoding (§3.6)
     # ------------------------------------------------------------------

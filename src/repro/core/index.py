@@ -24,6 +24,7 @@ import numpy as np
 
 from .blockstore import BlockStore, H
 from .extensible import GrowthPolicy, make_policy
+from .prepare import PreparedDoc, prepare_batch
 
 _FNV_OFFSET = np.uint64(0xCBF29CE484222325)
 _FNV_PRIME = np.uint64(0x100000001B3)
@@ -162,6 +163,84 @@ class DynamicIndex:
                 self.store.add_posting(h_ptr, d, f)
                 self.num_postings += 1
         return d
+
+    def add_documents(self, docs) -> list[int]:
+        """Batched §3.3 ingest: returns the assigned docids, ascending.
+
+        Answer-identical to a per-document :meth:`add_document` loop (same
+        docids, same decoded chains, same vocabulary order), but the
+        batch's postings are grouped per term first, so each term pays ONE
+        chain-tail lookup and one staged Double-VByte append run
+        (:meth:`BlockStore.append_run`) for the whole batch instead of the
+        per-posting accessor walk.  Block ALLOCATION order differs from
+        sequential ingest (all new heads first, overflow blocks per run),
+        so the raw block array is not byte-comparable — every decoded
+        answer is.
+
+        ``docs`` may be raw term sequences or pre-tokenized
+        :class:`~repro.core.prepare.PreparedDoc` records (the pipelined
+        write path prepares off the writer thread).
+        """
+        return self.add_prepared(prepare_batch(docs, self.word_level))
+
+    def add_prepared(self, prepared: list[PreparedDoc]) -> list[int]:
+        """Ingest pre-tokenized documents (see :meth:`add_documents`)."""
+        word = self.word_level
+        runs: dict[bytes, list] = {}
+        dids: list[int] = []
+        d = self.num_docs
+        nw = np_ = 0
+        for p in prepared:
+            d += 1
+            dids.append(d)
+            nw += p.doclen
+            if word:
+                np_ += len(p.occs)
+                for tb, wgap in p.occs:
+                    try:
+                        runs[tb].append((d, wgap))
+                    except KeyError:
+                        runs[tb] = [(d, wgap)]
+            else:
+                np_ += len(p.uniq)
+                for tb, f in zip(p.uniq, p.counts):
+                    try:
+                        runs[tb].append((d, f))
+                    except KeyError:
+                        runs[tb] = [(d, f)]
+        self.num_words += nw
+        self.num_postings += np_
+        self.num_docs = d
+        # runs iterate in first-occurrence order across the batch — the
+        # same head-creation (and engine intern) order sequential ingest
+        # would have produced
+        append_run = self.store.append_run
+        lookup = self._lookup_or_create
+        for tb, run in runs.items():
+            append_run(lookup(tb), run)
+        return dids
+
+    def add_runs(self, ndocs: int, nwords: int, npostings: int,
+                 groups) -> None:
+        """Append pre-grouped per-term posting runs.
+
+        The fused batch path: ``Engine.add_documents`` groups the batch's
+        postings per term during its own interning/bookkeeping pass and
+        hands the runs straight down — one traversal of the batch instead
+        of the second one :meth:`add_prepared` would cost on top.
+
+        ``groups`` is an iterable of ``(term_bytes, [(d, f), ...])`` with
+        each run in ingest order and terms in first-occurrence order (the
+        head-creation order a sequential ingest would have produced);
+        counters advance by the caller-computed totals.
+        """
+        append_run = self.store.append_run
+        lookup = self._lookup_or_create
+        for tb, run in groups:
+            append_run(lookup(tb), run)
+        self.num_docs += ndocs
+        self.num_words += nwords
+        self.num_postings += npostings
 
     def delete_document(self, docid: int) -> None:
         """Tombstone one document (the takedown primitive).

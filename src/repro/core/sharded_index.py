@@ -418,6 +418,88 @@ class ShardedEngine:
                     e.lifecycle.maybe_freeze()
         return g
 
+    @property
+    def word_level(self) -> bool:
+        return self.engines[0].index.word_level
+
+    def route_batch(self, prepared):
+        """Assign global docids round-robin and update the fleet-wide
+        statistics for a whole batch of
+        :class:`~repro.core.prepare.PreparedDoc` records — WITHOUT touching
+        any shard engine.  Returns ``(gids, per_shard, extra_bumps)``:
+
+          * ``gids`` — the global docids, in submission order;
+          * ``per_shard[s]`` — the sub-batch shard ``s`` owns, in local
+            docid order (round-robin arithmetic: global ``g`` lands on
+            shard ``(g-1) % S`` as local ``(g-1)//S + 1``);
+          * ``extra_bumps[s]`` — the number of batch documents shard ``s``
+            does NOT own.  A global ingest changes every shard's scoring
+            state (N, f_t, avgdl all move), so each shard's version must
+            advance by the FULL batch size: its own ingest bumps it by
+            ``len(per_shard[s])``, and whoever applies the sub-batch adds
+            ``extra_bumps[s]`` on top.  Splitting it this way keeps each
+            shard engine's ``version`` written by exactly one thread in
+            the pipelined path (its writer), never the router.
+
+        This is the router half of the pipelined write path
+        (``serve.ingest_pipeline``): it runs on the submitting thread —
+        fleet counters and the global df map stay single-writer — while
+        per-shard writer threads apply the returned sub-batches.  Global
+        statistics are published BEFORE any shard ingest (one
+        ``_FleetCounts`` store), so freeze hooks firing inside a shard's
+        apply already see statistics covering the whole batch — the same
+        order ``add_document`` uses.
+        """
+        c = self._counts
+        S = self.num_shards
+        base = c.num_docs
+        gids = list(range(base + 1, base + len(prepared) + 1))
+        per_shard: list[list] = [[] for _ in range(S)]
+        df_delta: dict[bytes, int] = {}
+        tokens = 0
+        for i, p in enumerate(prepared):
+            per_shard[(base + i) % S].append(p)
+            tokens += p.doclen
+            for tb in p.uniq:
+                df_delta[tb] = df_delta.get(tb, 0) + 1
+        live = [(e._tid, arr) for e in self.engines
+                if (arr := self._gft_cache.get(id(e.vocab))) is not None]
+        for tb, dd in df_delta.items():
+            df = self._ft.get(tb, 0) + dd
+            self._ft[tb] = df
+            for tid_map, arr in live:
+                tid = tid_map.get(tb)
+                if tid is not None and tid < len(arr):
+                    arr[tid] = df
+        self._counts = _FleetCounts(c.version + len(prepared),
+                                    base + len(prepared),
+                                    c.total_tokens + tokens,
+                                    c.deleted_docs)
+        extra = [len(prepared) - len(per_shard[s]) for s in range(S)]
+        return gids, per_shard, extra
+
+    def add_documents(self, docs) -> list[int]:
+        """Batched fleet ingest (synchronous: same single front-door
+        thread model as ``add_document``; the pipelined variant lives in
+        ``serve.ingest_pipeline``).  Answer-identical to a per-document
+        loop — same global docids, same fleet statistics, same per-shard
+        chains."""
+        from .prepare import prepare_batch
+        prepared = prepare_batch(docs, self.word_level)
+        gids, per_shard, extra = self.route_batch(prepared)
+        for s, e in enumerate(self.engines):
+            if per_shard[s]:
+                e.add_documents(per_shard[s])
+            if extra[s]:
+                e.version += extra[s]
+        # pump deferred freezes fleet-wide (see add_document): every queued
+        # shard may retry on any ingest
+        if self.coordinator.pending:
+            for e in self.engines:
+                if getattr(e, "lifecycle", None) is not None:
+                    e.lifecycle.maybe_freeze()
+        return gids
+
     def delete_document(self, docid: int) -> None:
         """Tombstone one document fleet-wide (same single-writer model as
         ``add_document``).  The global docid routes to its owner shard by
@@ -581,6 +663,9 @@ class ShardedEngine:
             agg.queries += s.queries
             agg.query_batches += s.query_batches
             agg.query_time_s += s.query_time_s
+            agg.ingest_docs += s.ingest_docs
+            agg.ingest_batches += s.ingest_batches
+            agg.ingest_time_s += s.ingest_time_s
             agg.collations += s.collations
             agg.delta_refreshes += s.delta_refreshes
             agg.delta_compactions += s.delta_compactions

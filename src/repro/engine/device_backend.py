@@ -79,7 +79,7 @@ class ResidentImageManager:
         self._frozen = None             # writer_only — stats-rebased frozen
         self._delta = None              # writer_only — DeltaIndex
         self._doclens = None                           # (cap+1,) f32 device
-        self._alive = None              # (cap+1,) f32 liveness mask or None
+        self._alive = None              # packed uint32 liveness bits or None
         self._n_stat = None
         self._avg_stat = None                          # fleet avgdl (sharded)
         self._synced_version = -1                      # writer_only
@@ -215,13 +215,18 @@ class ResidentImageManager:
         self._doclens = jnp.asarray(dl)
         # liveness mask: tombstoned docids score 0 inside the fused kernel's
         # accumulator; None (the common case) skips masking entirely so the
-        # no-delete path stays byte-identical to its pre-deletion programs
+        # no-delete path stays byte-identical to its pre-deletion programs.
+        # Packed 1 bit/docid (little-endian uint32 words, unpacked on the
+        # fly by the kernel) — 32x smaller resident than a dense f32 mask
         dead = eng.index.tombstones
         if dead:
-            al = np.zeros(self._doc_cap + 1, np.float32)
-            al[1:N + 1] = 1.0
-            al[np.fromiter(dead, np.int64, count=len(dead))] = 0.0
-            self._alive = jnp.asarray(al)
+            al = np.zeros(self._doc_cap + 1, bool)
+            al[1:N + 1] = True
+            al[np.fromiter(dead, np.int64, count=len(dead))] = False
+            bits = np.packbits(al, bitorder="little")
+            if bits.nbytes % 4:
+                bits = np.pad(bits, (0, 4 - bits.nbytes % 4))
+            self._alive = jnp.asarray(bits.view(np.uint32))
         else:
             self._alive = None
         if stats is None:

@@ -16,6 +16,7 @@ import numpy as np
 from ..core.collate import collate
 from ..core.index import DynamicIndex, group_occurrences
 from ..core.lifecycle import FreezeManager, FreezePolicy
+from ..core.prepare import prepare_batch
 from ..core.query import CollectionStats, TermStats
 from .backends import (
     HostBackend,
@@ -126,6 +127,9 @@ class Engine:
         # without a decode pass over the inverted chains
         self._doc_tids: list = [None]     # 1-indexed via position-0 pad
         self._deleted_tokens = 0          # Σ doclen over tombstoned docs
+        # tid-indexed per-batch grouping scratch for the fused doc-level
+        # batch ingest (entries are None between batches)
+        self._group_scratch: list = []
         self.stats_counters = EngineStats()
         # ONE resident device-image manager shared by the device and pallas
         # backends: a mixed stream pays for at most one frozen upload and
@@ -282,6 +286,7 @@ class Engine:
     def add_document(self, terms) -> int:
         """Ingest one document; it is queryable on every backend the moment
         this returns (device backends refresh their delta lazily)."""
+        t0 = time.perf_counter()
         d = self.index.add_document(terms)
         tbs = [t.encode() if isinstance(t, str) else t for t in terms]
         entry: list[tuple[int, int]] = []
@@ -305,9 +310,118 @@ class Engine:
         self._doc_tids.append(entry)
         self._doclens.append(len(terms))
         self.version += 1
+        sc = self.stats_counters
+        sc.ingest_docs += 1
+        sc.ingest_batches += 1
+        sc.ingest_time_s += time.perf_counter() - t0
         if self.lifecycle is not None:
             self.lifecycle.maybe_freeze()
         return d
+
+    def add_documents(self, docs) -> list[int]:
+        """Batched ingest: returns the assigned docids, ascending; every
+        document is queryable on every backend the moment this returns.
+
+        Answer-identical to a per-document :meth:`add_document` loop —
+        same docids, same term ids (batch interning follows the same
+        first-occurrence order), same forward-index entries, same decoded
+        chains — but the index append is the grouped per-term run path
+        (:meth:`DynamicIndex.add_prepared`) and the forward-index/statistics
+        bookkeeping runs batch-wise, so the per-document Python overhead is
+        amortized across the batch.  ``docs`` may be raw term sequences or
+        :class:`~repro.core.prepare.PreparedDoc` records tokenized off the
+        writer thread (``serve.ingest_pipeline``).
+
+        ``version`` advances by the batch size (the same final value as a
+        sequential loop — serving cache keys stay aligned); the lifecycle
+        freeze check runs once per batch, so a freeze may trigger with the
+        whole batch already ingested rather than mid-stream — tier contents
+        at any horizon are identical either way.
+        """
+        t0 = time.perf_counter()
+        word = self.index.word_level
+        prepared = prepare_batch(docs, word)
+        tid_of = self._tid
+        vocab = self.vocab
+        fts = self._fts
+        doc_dfs = self._doc_dfs
+        doc_tids = self._doc_tids
+        doclens = self._doclens
+        getid = tid_of.__getitem__
+        if word:
+            # word-level: the index groups the occurrence streams itself
+            dids = self.index.add_prepared(prepared)
+            for p in prepared:
+                uniq = p.uniq
+                try:
+                    tids = [*map(getid, uniq)]      # all-known fast path
+                except KeyError:
+                    for tb in uniq:                 # first-occurrence order
+                        if tb not in tid_of:
+                            tid_of[tb] = len(vocab)
+                            vocab.append(tb)
+                            fts.append(0)
+                            doc_dfs.append(0)
+                    tids = [*map(getid, uniq)]
+                for tid, f in zip(tids, p.counts):
+                    fts[tid] += f
+                    doc_dfs[tid] += 1
+                doc_tids.append([*zip(tids, p.counts)])
+                doclens.append(p.doclen)
+        else:
+            # doc-level FUSED path: the interning/bookkeeping pass also
+            # groups the batch's <d, f> postings per term (term-id-indexed
+            # lists — no second traversal, no dict probe per posting), and
+            # the runs go straight to DynamicIndex.add_runs.  ``touched``
+            # keeps first-occurrence order, so head creation matches what
+            # sequential ingest would have produced.
+            by_tid: list = self._group_scratch
+            touched: list[int] = []
+            ta = touched.append
+            d = self.index.num_docs
+            base = d
+            nwords = npostings = 0
+            for p in prepared:
+                uniq = p.uniq
+                try:
+                    tids = [*map(getid, uniq)]      # all-known fast path
+                except KeyError:
+                    for tb in uniq:                 # first-occurrence order
+                        if tb not in tid_of:
+                            tid_of[tb] = len(vocab)
+                            vocab.append(tb)
+                            fts.append(0)
+                            doc_dfs.append(0)
+                    tids = [*map(getid, uniq)]
+                if len(by_tid) < len(vocab):
+                    by_tid.extend([None] * (len(vocab) - len(by_tid)))
+                d += 1
+                cs = p.counts
+                for tid, f in zip(tids, cs):
+                    run = by_tid[tid]
+                    if run is None:
+                        by_tid[tid] = run = []
+                        ta(tid)
+                    run.append((d, f))
+                doc_tids.append([*zip(tids, cs)])
+                doclens.append(p.doclen)
+                nwords += p.doclen
+                npostings += len(tids)
+            self.index.add_runs(
+                d - base, nwords, npostings,
+                ((vocab[tid], by_tid[tid]) for tid in touched))
+            for tid in touched:     # df ticks per TERM, then reset scratch
+                fts[tid] += len(by_tid[tid])
+                by_tid[tid] = None
+            dids = list(range(base + 1, d + 1))
+        self.version += len(prepared)
+        sc = self.stats_counters
+        sc.ingest_docs += len(prepared)
+        sc.ingest_batches += 1
+        sc.ingest_time_s += time.perf_counter() - t0
+        if self.lifecycle is not None:
+            self.lifecycle.maybe_freeze()
+        return dids
 
     def delete_document(self, docid: int) -> list[tuple[int, int]]:
         """Tombstone one document (takedown/revision primitive).

@@ -96,6 +96,12 @@ class EngineStats:
     queries: int = 0
     query_batches: int = 0    # execute_many calls (latency denominator)
     query_time_s: float = 0.0  # wall-clock inside execute_many (plan+run)
+    ingest_docs: int = 0      # documents ingested (add_document(s))
+    ingest_batches: int = 0   # ingest calls (mirror of query_batches: a
+    #                           single add_document counts as a batch of 1)
+    ingest_time_s: float = 0.0  # wall-clock inside ingest (tokenize+append
+    #                             +bookkeeping; excludes queue wait in the
+    #                             pipelined path — writer-thread time only)
     collations: int = 0
     delta_refreshes: int = 0
     delta_compactions: int = 0  # refreshes that hit the fragmentation

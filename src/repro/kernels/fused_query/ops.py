@@ -128,9 +128,10 @@ def fused_query(images, qterms, qmask, *, mode: str = "ranked_tfidf",
       doclens: (cap+1,) f32 document lengths (bm25 only).
       n_stat / avg_stat: dynamic collection statistics (fleet-exact idf /
         avgdl); default to the image capacity / local doclens mean.
-      alive: optional (cap+1,) f32 liveness mask (0.0 at tombstoned docids
-        and index 0) — None skips masking entirely, keeping the no-delete
-        path byte-identical to its pre-deletion compilation.
+      alive: optional (ceil((cap+1)/32),) uint32 packed little-endian
+        liveness bitmask (bit ``d`` clear at tombstoned docids and index
+        0) — None skips masking entirely, keeping the no-delete path
+        byte-identical to its pre-deletion compilation.
       flavor: "pallas" (the kernel) or "ref" (same math inline).
 
     Returns ``matches (Q, cap+1) bool`` for conjunctive, else
@@ -159,7 +160,7 @@ def fused_query(images, qterms, qmask, *, mode: str = "ranked_tfidf",
     else:
         norm = jnp.zeros(2, jnp.float32)
         dl = jnp.zeros(1, jnp.float32)
-    alive_f = None if alive is None else alive.astype(jnp.float32)
+    alive_f = None if alive is None else alive.astype(jnp.uint32)
     if flavor == "pallas":
         return fused_query_kernel(parts, nterms, dl, norm, mode=mode, k=k,
                                   F=F, cap=cap, tq=tq, interpret=interpret,

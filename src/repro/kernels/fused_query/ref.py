@@ -224,6 +224,18 @@ def _scatter_add(acc: jnp.ndarray, docs: jnp.ndarray,
     return jax.vmap(lambda a, d, v: a.at[d].add(v))(acc, docs, vals)
 
 
+def _unpack_alive(alive: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """(words,) uint32 little-endian liveness bitmask → (cap+1,) bool.
+
+    Bit ``d`` of the mask (word ``d >> 5``, bit ``d & 31``) is document
+    ``d``'s liveness.  Packed storage keeps the device-resident mask at
+    1 bit/docid instead of the 32 bits/docid a dense f32 mask cost — the
+    unpack is a gather + shift over an iota, fused into the surrounding
+    program, so no dense mask ever lands in HBM."""
+    idx = jnp.arange(cap + 1, dtype=jnp.int32)
+    return ((alive[idx >> 5] >> (idx & 31).astype(jnp.uint32)) & 1) != 0
+
+
 def fused_tile(parts, nterms, doclens, bm25_norm, *, mode: str, k: int,
                F: int, cap: int, alive=None):
     """Decode → docids → score → select for a tile of queries.
@@ -241,11 +253,12 @@ def fused_tile(parts, nterms, doclens, bm25_norm, *, mode: str, k: int,
       bm25_norm: (2,) f32 — (k1*(1-b), k1*b/avgdl) (bm25 only).
       mode: "conjunctive" | "ranked_tfidf" | "bm25".
       k, F, cap: static top-k size, fold threshold, docid capacity.
-      alive: optional (cap+1,) f32 liveness mask (0.0 at tombstoned docids
-        and at index 0, 1.0 elsewhere) — dead documents' postings still
-        decode (they live in the uploaded images until the next freeze
-        compacts them away) but are masked out of the accumulator before
-        selection, so the fused path matches the host path under deletes.
+      alive: optional (ceil((cap+1)/32),) uint32 packed little-endian
+        liveness bitmask (bit ``d`` clear at tombstoned docids and at
+        index 0) — dead documents' postings still decode (they live in
+        the uploaded images until the next freeze compacts them away) but
+        are masked out of the accumulator before selection, so the fused
+        path matches the host path under deletes.
 
     Returns ``matches (TQ, cap+1) bool`` for conjunctive, else
     ``(top_d (TQ, kk) i32, top_s (TQ, kk) f32)`` with kk = min(k, cap+1),
@@ -260,7 +273,7 @@ def fused_tile(parts, nterms, doclens, bm25_norm, *, mode: str, k: int,
                                 valid.reshape(TQ, -1).astype(jnp.int32))
         matches = (hits == nterms[:, None]) & (nterms[:, None] > 0)
         if alive is not None:
-            matches = matches & (alive > 0)[None, :]
+            matches = matches & _unpack_alive(alive, cap)[None, :]
         return matches.at[:, 0].set(False)
     score = jnp.zeros((TQ, cap + 1), jnp.float32)
     for part in parts:
@@ -279,7 +292,7 @@ def fused_tile(parts, nterms, doclens, bm25_norm, *, mode: str, k: int,
     if alive is not None:
         # mask by select, not multiply: a fully-deleted term's padded idf
         # could be ±inf, and inf * 0 would poison the accumulator with nan
-        score = jnp.where((alive > 0)[None, :], score, 0.0)
+        score = jnp.where(_unpack_alive(alive, cap)[None, :], score, 0.0)
     # docids are the accumulator indices: top_k ties prefer the smaller
     # index, i.e. the smaller docid — canonical order for free.  Absent
     # docids hold exactly 0.0 and every real match scores > 0 (idf > 0),

@@ -9,7 +9,13 @@ delay for much higher throughput.
 
 Synchronous core, deliberately: one writer per shard is the paper's (and
 Asadi & Lin's) concurrency model, and a thread-safe wrapper can wrap
-``submit``/``flush`` without touching engine internals.
+``submit``/``flush`` without touching engine internals.  With
+``pipelined=True`` the write path moves onto per-shard writer queues
+(:class:`~repro.serve.ingest_pipeline.IngestPipeline`): ``ingest`` /
+``ingest_batch`` enqueue and return immediately, and the immediate-access
+barrier moves to ``flush`` — which drains the pipeline before executing,
+so a query still sees every document submitted before it.  The front door
+itself stays a single thread; per-shard appends run in parallel behind it.
 
 **Result cache**: repeated queries between ingests are answered from a small
 LRU keyed by ``(engine.version, static-tier epoch, query)``.  Both key
@@ -47,7 +53,8 @@ class QueryService:
     :class:`~repro.core.sharded_index.ShardedEngine` — anything with
     ``add_document``/``execute_many``)."""
 
-    def __init__(self, engine, max_batch: int = 32, cache_size: int = 256):
+    def __init__(self, engine, max_batch: int = 32, cache_size: int = 256,
+                 pipelined: bool = False, pipeline_queue: int = 8):
         self.engine = engine
         self.max_batch = max_batch
         self._pending: list[Ticket] = []                # writer_only
@@ -58,6 +65,17 @@ class QueryService:
             = OrderedDict()                             # writer_only
         self.cache_hits = 0
         self.cache_misses = 0
+        self.pipeline = None
+        if pipelined:
+            from .ingest_pipeline import IngestPipeline
+            self.pipeline = IngestPipeline(engine, max_queue=pipeline_queue)
+
+    def close(self) -> None:
+        """Drain and stop the ingest pipeline, if one is attached.  The
+        service remains usable afterwards on the synchronous write path."""
+        if self.pipeline is not None:
+            self.pipeline.close()
+            self.pipeline = None
 
     # -- result cache ----------------------------------------------------
 
@@ -109,11 +127,29 @@ class QueryService:
     def ingest(self, terms) -> int:
         """Ingest one document.  Pending queries were submitted BEFORE this
         document, so they are NOT flushed first — immediate access only
-        requires a query to see documents ingested before its submission."""
+        requires a query to see documents ingested before its submission.
+        On the pipelined path this enqueues and returns the docid
+        immediately; visibility is settled by ``flush``'s drain."""
         t0 = time.perf_counter()
-        d = self.engine.add_document(terms)
+        if self.pipeline is not None:
+            d = self.pipeline.submit([terms])[0]
+        else:
+            d = self.engine.add_document(terms)
         self.ingest_latencies.append(time.perf_counter() - t0)
         return d
+
+    def ingest_batch(self, docs) -> list[int]:
+        """Ingest a batch of documents in one write-path pass (one chain-tail
+        lookup and one contiguous encode per distinct term — see
+        ``DynamicIndex.add_documents``).  Same flush semantics as
+        ``ingest``: pending queries legally miss these documents."""
+        t0 = time.perf_counter()
+        if self.pipeline is not None:
+            dids = self.pipeline.submit(docs)
+        else:
+            dids = self.engine.add_documents(docs)
+        self.ingest_latencies.append(time.perf_counter() - t0)
+        return dids
 
     def delete(self, docid: int) -> None:
         """Tombstone one document.  Pending queries were submitted while it
@@ -156,7 +192,15 @@ class QueryService:
         the misses).  Duplicate queries within a flush execute once — the
         engine batch carries unique queries only (the fused device path
         then decodes each term chain set once per flush), and duplicates
-        are fanned back out as private result copies."""
+        are fanned back out as private result copies.
+
+        Pipelined mode: the in-flight ingest queues are DRAINED first —
+        every pending query was submitted after those documents, so this
+        one barrier honors every ticket's high-water mark at once, and
+        after it the writer threads are idle, making the cache keys below
+        (engine version) stable and the engine safe to fan out over."""
+        if self.pipeline is not None:
+            self.pipeline.drain()
         batch, self._pending = self._pending, []
         if not batch:
             return []
@@ -227,13 +271,15 @@ class QueryService:
     # -- streams --------------------------------------------------------
 
     def run_stream(self, ops) -> list[Ticket]:
-        """Drive a mixed stream of ("doc", terms) / ("query", Query) /
-        ("delete", docid) / ("update", (docid, terms)) ops; returns every
-        query ticket in submission order."""
+        """Drive a mixed stream of ("doc", terms) / ("docs", batch) /
+        ("query", Query) / ("delete", docid) / ("update", (docid, terms))
+        ops; returns every query ticket in submission order."""
         tickets = []
         for kind, payload in ops:
             if kind == "doc":
                 self.ingest(payload)
+            elif kind == "docs":
+                self.ingest_batch(payload)
             elif kind == "query":
                 tickets.append(self.submit(payload))
             elif kind == "delete":

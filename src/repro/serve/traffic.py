@@ -140,6 +140,7 @@ class TrafficReport:
 
 def run_traffic(engine, schedule: list[Event], docs, *, max_batch: int = 32,
                 cache_size: int = 256, clock=None, pace: bool = False,
+                ingest_batch: int = 1,
                 service: QueryService | None = None) -> TrafficReport:
     """Drive ``engine`` through ``schedule``; returns the measured report.
 
@@ -155,6 +156,13 @@ def run_traffic(engine, schedule: list[Event], docs, *, max_batch: int = 32,
     from absorbing unrelated ingest cost.  (Immediate access never needs
     the opposite order: a query must only see documents ingested before its
     submission.)
+
+    ``ingest_batch > 1`` coalesces consecutive ingest events into one
+    ``QueryService.ingest_batch`` call (the batched write path).  Buffered
+    documents are ALWAYS ingested before the next query submission or
+    delete — every event that could observe them still sees exactly the
+    documents scheduled before it, so answers (and cache behavior per
+    engine version reached) are schedule-equivalent to the unbatched run.
     """
     clock = clock or time.perf_counter
     svc = service or QueryService(engine, max_batch=max_batch,
@@ -182,6 +190,20 @@ def run_traffic(engine, schedule: list[Event], docs, *, max_batch: int = 32,
 
     n_q = n_i = n_d = 0
     ingested: list[int] = []    # ingest ordinal -> real docid
+    ibuf: list = []             # coalesced ingest docs awaiting submission
+
+    def flush_ingests() -> None:
+        nonlocal gap
+        if not ibuf:
+            return
+        n = len(ibuf)
+        try:
+            ingested.extend(svc.ingest_batch(list(ibuf)))
+        except Exception:
+            gap += n
+            ingested.extend([-1] * n)   # keep later ordinals aligned
+        ibuf.clear()
+
     for ev in schedule:
         sched = t_run0 + ev.at_s
         if pace:
@@ -189,14 +211,23 @@ def run_traffic(engine, schedule: list[Event], docs, *, max_batch: int = 32,
             if delay > 0:
                 time.sleep(delay)
         if ev.kind == "ingest":
-            drain(svc.flush())
             n_i += 1
+            if ingest_batch > 1:
+                ibuf.append(docs[ev.doc % len(docs)])
+                if len(ibuf) >= ingest_batch:
+                    drain(svc.flush())
+                    flush_ingests()
+                continue
+            drain(svc.flush())
             try:
                 ingested.append(svc.ingest(docs[ev.doc % len(docs)]))
             except Exception:
                 gap += 1
                 ingested.append(-1)     # keep later ordinals aligned
         elif ev.kind == "delete":
+            # the target docid may still be in the coalescing buffer, and a
+            # delete must observe every document scheduled before it
+            flush_ingests()
             # svc.delete flushes pending itself (they must see the doc
             # alive); flushing here first lets drain() account latencies
             drain(svc.flush())
@@ -206,6 +237,8 @@ def run_traffic(engine, schedule: list[Event], docs, *, max_batch: int = 32,
             except Exception:
                 gap += 1
         else:
+            # this query must see every ingest event scheduled before it
+            flush_ingests()
             n_q += 1
             now = clock()
             try:
@@ -218,6 +251,7 @@ def run_traffic(engine, schedule: list[Event], docs, *, max_batch: int = 32,
             pending.append((t, min(sched, now)))
             if t.done:          # submit auto-flushed a full batch
                 drain([p for p, _ in pending if p.done])
+    flush_ingests()
     drain(svc.flush())
     drain([p for p, _ in pending])  # anything left unanswered counts as gap
     t_run1 = clock()

@@ -1,0 +1,192 @@
+"""IngestPipeline: per-shard writer queues, the fan-out barrier, error
+propagation, and a mixed ingest/query/delete stress run.
+
+This module (and the pipeline it exercises) runs under the concurrency
+sanitizer in CI (``pytest --sanitize``): the stress test drives every lock
+in the module — queue internals, per-writer condition variables, freeze
+coordination — from both the front-door thread and the writer threads, so
+a lock-order inversion or an unlocked shared write surfaces here.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.lifecycle import FreezePolicy
+from repro.core.sharded_index import ShardedEngine
+from repro.engine import Engine, Query
+from repro.serve import QueryService
+from repro.serve.ingest_pipeline import IngestPipeline, IngestTicket
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(2024)
+    vocab = [f"t{i}" for i in range(100)]
+    probs = 1.0 / np.arange(1, 101) ** 1.05
+    probs /= probs.sum()
+    docs = [[vocab[i] for i in rng.choice(100, size=rng.integers(5, 30),
+                                          p=probs)]
+            for _ in range(240)]
+    return vocab, docs
+
+
+# --------------------------------------------------------------------------
+# barrier mechanics
+# --------------------------------------------------------------------------
+
+
+def test_ticket_and_wait(corpus):
+    _, docs = corpus
+    with IngestPipeline(Engine(B=64)) as pipe:
+        t0 = pipe.ticket()
+        assert t0 == IngestTicket((0,))
+        pipe.wait(t0)                       # nothing submitted: no block
+        ids = pipe.submit(docs[:10])
+        assert ids == list(range(1, 11))
+        t1 = pipe.ticket()
+        assert t1.marks == (10,)
+        pipe.wait(t1)
+        assert not pipe.in_flight()
+        pipe.wait(t0)                       # old tickets stay satisfied
+        # docids keep flowing from the pipeline-side counter
+        assert pipe.submit(docs[10:13]) == [11, 12, 13]
+        pipe.drain()
+        assert pipe.engine.index.num_docs == 13
+
+
+def test_sharded_marks_advance_by_full_batch(corpus):
+    _, docs = corpus
+    se = ShardedEngine(num_shards=3, B=64)
+    with IngestPipeline(se) as pipe:
+        pipe.submit(docs[:7])
+        # every shard's mark advances by the WHOLE batch (own sub-batch +
+        # version bumps for the documents it does not own)
+        assert pipe.ticket().marks == (7, 7, 7)
+        pipe.drain()
+        assert [e.version for e in se.engines] == [7, 7, 7]
+        assert se.num_docs == 7
+    se.close()
+
+
+def test_bounded_queue_backpressure(corpus):
+    """A tiny queue forces submit() to block on slow writers — the run
+    still completes with every document applied."""
+    _, docs = corpus
+    with IngestPipeline(Engine(B=64), max_queue=1) as pipe:
+        for i in range(0, 200, 5):
+            pipe.submit(docs[i % len(docs):(i % len(docs)) + 5])
+        pipe.drain()
+        assert pipe.engine.index.num_docs == 200
+
+
+def test_writer_error_propagates():
+    eng = Engine(B=64)
+
+    def boom(docs):
+        raise ValueError("writer exploded")
+
+    eng.add_documents = boom
+    pipe = IngestPipeline(eng)
+    pipe.submit([["a", "b"]])
+    with pytest.raises(RuntimeError, match="ingest writer"):
+        pipe.drain()
+    # close() after a writer death must not hang or mask the error
+    with pytest.raises(RuntimeError, match="ingest writer"):
+        pipe.close()
+
+
+def test_close_is_idempotent(corpus):
+    _, docs = corpus
+    pipe = IngestPipeline(Engine(B=64))
+    pipe.submit(docs[:5])
+    pipe.close()
+    pipe.close()
+    assert pipe.engine.index.num_docs == 5
+
+
+# --------------------------------------------------------------------------
+# stress: mixed ingest/query/delete under background freezes (sanitized)
+# --------------------------------------------------------------------------
+
+
+def test_pipelined_stress_with_freezes(corpus):
+    """The whole serving stack at once: pipelined ingest into a 4-shard
+    fleet with background freezes, queries and deletes hitting the front
+    door between batches, and a synchronous oracle asserting exactness at
+    the end.  Under ``--sanitize`` this is the lock-discipline workout for
+    the writer-queue module."""
+    vocab, docs = corpus
+    policy = FreezePolicy(every_docs=25, background=True)
+
+    def mk():
+        return ShardedEngine(num_shards=4, B=64, tier_policy=policy)
+
+    oracle = QueryService(mk())
+    svc = QueryService(mk(), pipelined=True, pipeline_queue=2)
+    rng = np.random.default_rng(99)
+    pos = 0
+    deleted = []
+    for step in range(24):
+        n = int(rng.integers(1, 14))
+        batch = docs[pos:pos + n]
+        pos += len(batch)
+        if not batch:
+            break
+        a = oracle.ingest_batch(batch)
+        b = svc.ingest_batch(batch)
+        assert a == b
+        if step % 3 == 2:
+            terms = tuple(vocab[i] for i in
+                          rng.choice(50, size=2, replace=False))
+            q = Query(terms=terms, mode="bm25", k=10)
+            ra, rb = oracle.query(q), svc.query(q)
+            assert ra.docids.tolist() == rb.docids.tolist()
+            assert np.array_equal(ra.scores, rb.scores)
+        if step % 5 == 4 and a:
+            victim = int(rng.choice(a))
+            oracle.delete(victim)
+            svc.delete(victim)
+            deleted.append(victim)
+    svc.engine.drain_freezes()
+    oracle.engine.drain_freezes()
+    assert svc.engine.num_docs == oracle.engine.num_docs == pos
+    assert svc.engine.stats().deleted_docs == len(deleted)
+    for mode in ("conjunctive", "ranked_tfidf", "bm25"):
+        for _ in range(6):
+            terms = tuple(vocab[i] for i in
+                          rng.choice(60, size=int(rng.integers(1, 4)),
+                                     replace=False))
+            q = Query(terms=terms, mode=mode, k=10)
+            ra, rb = oracle.query(q), svc.query(q)
+            assert ra.docids.tolist() == rb.docids.tolist(), (mode, terms)
+            if ra.scores is not None:
+                assert np.array_equal(ra.scores, rb.scores)
+    svc.close()
+    svc.engine.close()
+    oracle.engine.close()
+
+
+def test_front_door_thread_handoff(corpus):
+    """The front door may move between threads as long as calls never
+    overlap (the documented single-front-door contract): submits from a
+    second thread, then a drain + query from the main thread."""
+    _, docs = corpus
+    eng = Engine(B=64)
+    with IngestPipeline(eng) as pipe:
+        done = threading.Event()
+
+        def front():
+            for i in range(0, 60, 6):
+                pipe.submit(docs[i:i + 6])
+            done.set()
+
+        th = threading.Thread(target=front)
+        th.start()
+        th.join()
+        assert done.is_set()
+        pipe.drain()
+        assert eng.index.num_docs == 60
+        r = eng.execute(Query(terms=(docs[0][0],), mode="conjunctive"))
+        assert len(r.docids) > 0
